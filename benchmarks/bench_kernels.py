@@ -1,0 +1,92 @@
+"""Kernel-layer benchmark: wall time of the chunked-parallel forms vs the
+sequential reference scans (CPU, jit-compiled jnp paths; the Pallas kernels
+themselves are validated in interpret mode — timing them interpreted is
+meaningless, so this measures the algorithmic win of the chunked forms,
+which is the same restructuring the TPU kernels implement)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import CsvOut
+
+
+def _timeit(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e3  # ms
+
+
+def main(out=None) -> dict:
+    from repro.models.rwkv import rwkv_scan_chunked, rwkv_scan_ref
+    from repro.models.ssd import ssd_scan_chunked, ssd_scan_ref
+
+    table = CsvOut("kernels", ["kernel", "path", "ms_per_call", "speedup"])
+    results = {}
+
+    b, t, h, d = 2, 2048, 8, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    r = jax.random.normal(ks[0], (b, t, h, d))
+    k = jax.random.normal(ks[1], (b, t, h, d))
+    v = jax.random.normal(ks[2], (b, t, h, d))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, t, h, d)) - 2))
+    u = 0.1 * jax.random.normal(ks[4], (h, d))
+    s0 = jnp.zeros((b, h, d, d))
+    ref = jax.jit(lambda *a: rwkv_scan_ref(*a)[0])
+    chk = jax.jit(lambda *a: rwkv_scan_chunked(*a)[0])
+    t_ref = _timeit(ref, r, k, v, w, u, s0)
+    t_chk = _timeit(chk, r, k, v, w, u, s0)
+    table.add("rwkv6_wkv", "sequential_ref", round(t_ref, 1), 1.0)
+    table.add("rwkv6_wkv", "chunked", round(t_chk, 1), round(t_ref / t_chk, 2))
+    results["rwkv6"] = t_ref / t_chk
+
+    p, n = 64, 64
+    x = jax.random.normal(ks[0], (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    a = jnp.exp(-jnp.exp(jax.random.normal(ks[2], (b, t, h)) - 1) * dt)
+    B = jax.random.normal(ks[3], (b, t, n))
+    C = jax.random.normal(ks[4], (b, t, n))
+    s0 = jnp.zeros((b, h, p, n))
+    ref = jax.jit(lambda *a_: ssd_scan_ref(*a_)[0])
+    chk = jax.jit(lambda *a_: ssd_scan_chunked(*a_)[0])
+    t_ref = _timeit(ref, x, dt, a, B, C, s0)
+    t_chk = _timeit(chk, x, dt, a, B, C, s0)
+    table.add("ssd", "sequential_ref", round(t_ref, 1), 1.0)
+    table.add("ssd", "chunked", round(t_chk, 1), round(t_ref / t_chk, 2))
+    results["ssd"] = t_ref / t_chk
+
+    # Attention: q-chunked (flash-style blocking) vs dense materialization.
+    from repro.kernels.flash_attention.ref import attention_ref
+    import dataclasses
+    from repro.configs import get_smoke
+    from repro.models.attention import mha
+
+    cfg = dataclasses.replace(get_smoke("olmo_1b"), attn_chunk=256)
+    bq, hq, sq, hd = 1, 4, 2048, 64
+    q = jax.random.normal(ks[0], (bq, sq, hq, hd), jnp.float32)
+    kk = jax.random.normal(ks[1], (bq, sq, hq, hd), jnp.float32)
+    vv = jax.random.normal(ks[2], (bq, sq, hq, hd), jnp.float32)
+    mask = jnp.tril(jnp.ones((sq, sq), dtype=bool))
+    chunked = jax.jit(lambda q_, k_, v_: mha(cfg, q_, k_, v_, mask))
+    dense_cfg = dataclasses.replace(cfg, attn_chunk=sq)
+    dense = jax.jit(lambda q_, k_, v_: mha(dense_cfg, q_, k_, v_, mask))
+    t_dense = _timeit(dense, q, kk, vv)
+    t_chunk = _timeit(chunked, q, kk, vv)
+    table.add("attention_2k", "dense", round(t_dense, 1), 1.0)
+    table.add("attention_2k", "q_chunked", round(t_chunk, 1),
+              round(t_dense / t_chunk, 2))
+    results["attention"] = t_dense / t_chunk
+    table.emit(out)
+    print(f"# kernels: chunked-vs-ref speedups rwkv6={results['rwkv6']:.1f}x "
+          f"ssd={results['ssd']:.1f}x attn_chunked/dense={results['attention']:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    main()

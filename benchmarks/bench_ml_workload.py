@@ -1,0 +1,86 @@
+"""Beyond-paper: HFSP over the ML-job workload (DESIGN.md §2), two ways.
+
+1. Simulated at production scale: jobs are train/serve runs of the
+   assigned architectures (step quanta as tasks, sizes from the §Roofline
+   step-time estimates), on a 32-gang pod.
+2. Real execution: reduced-config JAX training jobs driven by the
+   GangRuntime under FIFO vs HFSP on this host (sojourn in wall seconds).
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import CsvOut, SCHEDULERS
+from repro.core import ClusterSpec, Simulator
+from repro.workload import ml_dataset
+
+
+def simulated(out=None) -> dict:
+    cluster = ClusterSpec(
+        num_machines=32, map_slots_per_machine=1, reduce_slots_per_machine=0
+    )
+    table = CsvOut("ml_sim", ["scheduler", "mean_sojourn_s", "p95_s"])
+    import numpy as np
+
+    means = {}
+    for name in ("fifo", "fair", "hfsp"):
+        jobs, _ = ml_dataset(seed=1, num_jobs=40, gang_slots=32)
+        sch = SCHEDULERS[name](cluster)
+        res = Simulator(cluster, sch, jobs).run()
+        vals = np.asarray(list(res.sojourn.values()))
+        means[name] = float(vals.mean())
+        table.add(name, round(means[name], 1),
+                  round(float(np.percentile(vals, 95)), 1))
+    table.emit(out)
+    print(f"# ml_sim: mean sojourn fifo={means['fifo']:.0f}s "
+          f"fair={means['fair']:.0f}s hfsp={means['hfsp']:.0f}s")
+    return means
+
+
+def real(out=None) -> dict:
+    """Small real-JAX run (a few jobs, reduced configs) — smoke-scale."""
+    from repro.checkpoint import CheckpointStore
+    from repro.configs import get_smoke
+    from repro.core import FIFOScheduler, HFSPConfig, HFSPScheduler
+    from repro.runtime import GangRuntime, MLJob
+
+    def jobs():
+        return [
+            MLJob(0, get_smoke("olmo_1b"), total_steps=8, steps_per_quantum=2,
+                  arrival_time=0.0, name="big"),
+            MLJob(1, get_smoke("gemma2_2b"), total_steps=2,
+                  steps_per_quantum=1, arrival_time=2.0, name="small-1"),
+            MLJob(2, get_smoke("rwkv6_1b6"), total_steps=2,
+                  steps_per_quantum=1, arrival_time=3.0, name="small-2"),
+        ]
+
+    cluster = ClusterSpec(num_machines=1, map_slots_per_machine=1,
+                          reduce_slots_per_machine=0)
+    table = CsvOut("ml_real", ["scheduler", "mean_sojourn_s", "small_mean_s"])
+    means = {}
+    for name, mk in (
+        ("fifo", lambda c: FIFOScheduler(c)),
+        ("hfsp", lambda c: HFSPScheduler(c, HFSPConfig(sample_set_size=1))),
+    ):
+        with tempfile.TemporaryDirectory() as d:
+            rtm = GangRuntime(cluster, mk(cluster), jobs(), CheckpointStore(d))
+            rep = rtm.run(max_wall_s=300)
+        small = [rep["sojourn"][j] for j in (1, 2) if j in rep["sojourn"]]
+        means[name] = rep["mean_sojourn"]
+        table.add(name, round(rep["mean_sojourn"], 1),
+                  round(sum(small) / max(len(small), 1), 1))
+    table.emit(out)
+    print(f"# ml_real: mean sojourn fifo={means['fifo']:.1f}s "
+          f"hfsp={means['hfsp']:.1f}s (real JAX jobs on this host)")
+    return means
+
+
+def main(out=None) -> dict:
+    a = simulated(out)
+    b = real(out)
+    return {"sim": a, "real": b}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Fig. 4 — per-job sojourn difference, FAIR minus HFSP.
+
+Paper claim: at most ~1 of 100 jobs is (slightly) better off under FAIR —
+the experimental support for the FSP dominance conjecture."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import CsvOut, run_fb
+from repro.core.metrics import per_job_delta
+
+
+def main(out=None) -> dict:
+    res_fair, class_of, _, _ = run_fb("fair", seed=0)
+    res_hfsp, _, _, _ = run_fb("hfsp", seed=0)
+    delta = per_job_delta(res_fair, res_hfsp)  # fair - hfsp (>0: hfsp wins)
+    vals = np.asarray(sorted(delta.values()))
+    worse = [(j, d) for j, d in delta.items() if d < -1.0]
+
+    table = CsvOut("fig4_delta", ["stat", "value"])
+    table.add("jobs", len(delta))
+    table.add("hfsp_better_or_equal", int((vals >= -1.0).sum()))
+    table.add("hfsp_worse_by_1s_plus", len(worse))
+    table.add("max_gain_s", round(float(vals.max()), 1))
+    table.add("max_loss_s", round(float(-vals.min()), 1))
+    table.add("median_delta_s", round(float(np.median(vals)), 1))
+    table.emit(out)
+    print(f"# fig4: {int((vals >= -1.0).sum())}/{len(delta)} jobs no worse "
+          f"under HFSP (dominance conjecture); worst regression "
+          f"{-float(vals.min()):.0f}s, best gain {float(vals.max()):.0f}s")
+    return {"frac_no_worse": float((vals >= -1.0).mean())}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Fig. 7 — preemption primitives on the paper's synthetic REDUCE workload.
+
+4 machines x 2 reduce slots; j1 = 11 reduce tasks x ~500 s arriving at
+2:20; j2..j5 arrive at 2:30 (j2 has two tasks, j3..j5 one each, all much
+shorter).  Paper: EAGER ~= 9 min mean sojourn vs WAIT ~= 15 min (~40%
+larger), and KILL wastes j1's work."""
+
+from __future__ import annotations
+
+from benchmarks.common import CsvOut
+from repro.core import (
+    ClusterSpec,
+    HFSPConfig,
+    HFSPScheduler,
+    JobSpec,
+    Phase,
+    Preemption,
+    Simulator,
+    TaskSpec,
+)
+
+
+def _workload():
+    jobs = [
+        JobSpec(
+            job_id=1,
+            arrival_time=140.0,  # 2 min 20 s
+            map_tasks=(TaskSpec(1, Phase.MAP, 0, 1.0),),
+            reduce_tasks=tuple(
+                TaskSpec(1, Phase.REDUCE, i, 500.0) for i in range(11)
+            ),
+        )
+    ]
+    for jid in (2, 3, 4, 5):
+        n = 2 if jid == 2 else 1
+        # "Reduce task times are smaller than that of j1" (500 s) — the
+        # paper gives no exact value; 240 s reproduces its 9-vs-15-min
+        # landscape.
+        jobs.append(
+            JobSpec(
+                job_id=jid,
+                arrival_time=150.0,  # 2 min 30 s
+                map_tasks=(TaskSpec(jid, Phase.MAP, 0, 1.0),),
+                reduce_tasks=tuple(
+                    TaskSpec(jid, Phase.REDUCE, i, 240.0) for i in range(n)
+                ),
+            )
+        )
+    return jobs
+
+
+def main(out=None) -> dict:
+    cluster = ClusterSpec(
+        num_machines=4, map_slots_per_machine=1, reduce_slots_per_machine=2
+    )
+    table = CsvOut("fig7_preemption", [
+        "primitive", "mean_sojourn_min", "j1_sojourn_min", "suspensions",
+        "kills", "waits",
+    ])
+    results = {}
+    for mode in (Preemption.EAGER, Preemption.WAIT, Preemption.KILL):
+        sch = HFSPScheduler(cluster, HFSPConfig(preemption=mode, delta=60.0))
+        res = Simulator(cluster, sch, _workload()).run()
+        mean_min = res.mean_sojourn() / 60.0
+        results[mode.value] = mean_min
+        table.add(
+            mode.value, round(mean_min, 1),
+            round(res.sojourn[1] / 60.0, 1),
+            sch.stats.suspensions, sch.stats.kills, sch.stats.waits,
+        )
+    table.emit(out)
+    gap = results["wait"] / results["eager"]
+    print(f"# fig7: EAGER {results['eager']:.1f} min vs WAIT "
+          f"{results['wait']:.1f} min ({(gap-1)*100:.0f}% larger; paper: "
+          f"~9 vs ~15 min, ~40%); KILL {results['kill']:.1f} min")
+    return results
+
+
+if __name__ == "__main__":
+    main()

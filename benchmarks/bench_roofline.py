@@ -1,0 +1,52 @@
+"""§Roofline table: reads the dry-run JSON (produced by
+``python -m repro.launch.dryrun --all --out dryrun_1pod.json``) and prints
+the per-(arch x shape) roofline terms + dominant bottleneck."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import CsvOut
+
+
+def main(out=None, path: str = "dryrun_1pod.json") -> dict:
+    if not os.path.exists(path):
+        print(f"# roofline: {path} not found — run "
+              "`python -m repro.launch.dryrun --all --out dryrun_1pod.json`")
+        return {}
+    reports = json.load(open(path))
+    table = CsvOut("roofline", [
+        "arch", "shape", "status", "compute_ms", "memory_ms",
+        "collective_ms", "dominant", "useful_ratio", "temp_gb",
+    ])
+    worst = None
+    for r in reports:
+        if r["status"] == "SKIP":
+            table.add(r["arch"], r["shape"], "SKIP", "", "", "", "", "", "")
+            continue
+        if r["status"] != "OK" or "compute_s" not in r:
+            table.add(r["arch"], r["shape"], r["status"], "", "", "", "", "", "")
+            continue
+        table.add(
+            r["arch"], r["shape"], "OK",
+            round(r["compute_s"] * 1e3, 2),
+            round(r["memory_s"] * 1e3, 2),
+            round(r["collective_s"] * 1e3, 2),
+            r["dominant"],
+            round(r.get("useful_ratio") or 0.0, 3),
+            round((r.get("temp_bytes") or 0) / 2**30, 1),
+        )
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / bound if bound else 0.0
+        if worst is None or frac < worst[2]:
+            worst = (r["arch"], r["shape"], frac)
+    table.emit(out)
+    if worst:
+        print(f"# roofline: worst compute-fraction cell: {worst[0]} x "
+              f"{worst[1]} ({worst[2]*100:.1f}% of bound is compute)")
+    return {"cells": len(reports)}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fig. 3 — ECDFs of sojourn times per job class, FIFO vs FAIR vs HFSP.
+
+Paper claims to validate:
+* HFSP ~= FAIR for small jobs, significantly shorter for medium/large;
+* FIFO mean sojourn is a multiple (paper: ~5x) of HFSP's.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import CsvOut, run_fb
+from repro.core.metrics import ecdf, per_class_sojourns, summarize
+
+
+def main(out=None) -> dict:
+    table = CsvOut("fig3_sojourn", [
+        "scheduler", "class", "mean_s", "median_s", "p95_s", "count",
+    ])
+    means = {}
+    per_class = {}
+    for name in ("fifo", "fair", "hfsp"):
+        res, class_of, sch, wall = run_fb(name, seed=0)
+        summ = summarize(res, class_of)
+        for cls, s in summ.items():
+            table.add(name, cls, round(s.mean, 1), round(s.median, 1),
+                      round(s.p95, 1), s.count)
+        means[name] = summ["all"].mean
+        per_class[name] = per_class_sojourns(res, class_of)
+    table.emit(out)
+
+    # ECDF quartiles for the figure (printed compactly).
+    q = CsvOut("fig3_ecdf", ["scheduler", "class", "p25_s", "p50_s", "p75_s", "p90_s"])
+    for name, pc in per_class.items():
+        for cls, vals in sorted(pc.items()):
+            xs = np.asarray(vals)
+            q.add(name, cls, *[round(float(np.percentile(xs, p)), 1)
+                               for p in (25, 50, 75, 90)])
+    q.emit(out)
+
+    ratio = means["fifo"] / means["hfsp"]
+    print(f"# fig3: FIFO/HFSP mean sojourn ratio = {ratio:.2f}x "
+          f"(paper: ~5x on their trace); HFSP {means['hfsp']:.0f}s "
+          f"FAIR {means['fair']:.0f}s FIFO {means['fifo']:.0f}s")
+    return {"means": means, "fifo_over_hfsp": ratio}
+
+
+if __name__ == "__main__":
+    main()

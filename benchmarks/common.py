@@ -1,0 +1,63 @@
+"""Shared benchmark helpers: scheduler construction + CSV emission."""
+
+from __future__ import annotations
+
+import csv
+import io
+import sys
+import time
+
+from repro.core import (
+    FairScheduler,
+    FIFOScheduler,
+    HFSPConfig,
+    HFSPScheduler,
+    Preemption,
+    Simulator,
+)
+from repro.core.metrics import summarize
+from repro.workload import fb_cluster, fb_dataset
+
+SCHEDULERS = {
+    "fifo": lambda c, **kw: FIFOScheduler(c),
+    "fair": lambda c, **kw: FairScheduler(c),
+    "hfsp": lambda c, **kw: HFSPScheduler(c, HFSPConfig(**kw)),
+    "hfsp-wait": lambda c, **kw: HFSPScheduler(
+        c, HFSPConfig(preemption=Preemption.WAIT, **kw)
+    ),
+    "hfsp-kill": lambda c, **kw: HFSPScheduler(
+        c, HFSPConfig(preemption=Preemption.KILL, **kw)
+    ),
+}
+
+
+def run_fb(name: str, *, machines: int = 100, seed: int = 0, num_jobs: int = 100,
+           spec=None, track_timeline: bool = False, **sched_kw):
+    """One FB-dataset run; returns (SimResult, class_of, scheduler, wall_s)."""
+    cluster = fb_cluster(num_machines=machines)
+    jobs, class_of = fb_dataset(seed=seed, num_jobs=num_jobs, spec=spec)
+    sch = SCHEDULERS[name](cluster, **sched_kw)
+    t0 = time.time()
+    res = Simulator(cluster, sch, jobs, track_timeline=track_timeline).run()
+    return res, class_of, sch, time.time() - t0
+
+
+class CsvOut:
+    """Collects rows and prints a CSV block per benchmark."""
+
+    def __init__(self, bench: str, header: list[str]):
+        self.bench = bench
+        self.header = header
+        self.rows: list[list] = []
+
+    def add(self, *row) -> None:
+        self.rows.append(list(row))
+
+    def emit(self, file=None) -> None:
+        file = file or sys.stdout
+        buf = io.StringIO()
+        w = csv.writer(buf)
+        w.writerow(["bench"] + self.header)
+        for r in self.rows:
+            w.writerow([self.bench] + r)
+        print(buf.getvalue(), end="", file=file)

@@ -1,0 +1,70 @@
+"""Benchmark driver: one benchmark per paper table/figure + the
+beyond-paper ML-workload and kernel/roofline benches.  Emits CSV blocks.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3,fig7] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_cluster_size,
+    bench_estimation_error,
+    bench_kernels,
+    bench_locality,
+    bench_ml_workload,
+    bench_per_job_delta,
+    bench_preemption,
+    bench_roofline,
+    bench_sojourn,
+)
+
+BENCHES = {
+    "fig3": bench_sojourn.main,
+    "fig4": bench_per_job_delta.main,
+    "fig5": bench_cluster_size.main,
+    "fig6": bench_estimation_error.main,
+    "fig7": bench_preemption.main,
+    "locality": bench_locality.main,
+    "ml": bench_ml_workload.main,
+    "kernels": bench_kernels.main,
+    "roofline": bench_roofline.main,
+}
+
+FAST_SKIP = {"fig5", "fig6", "ml"}  # the long ones
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    names = list(BENCHES)
+    if args.only:
+        names = [n for n in args.only.split(",") if n in BENCHES]
+    elif args.fast:
+        names = [n for n in names if n not in FAST_SKIP]
+
+    failed = []
+    for name in names:
+        print(f"\n==== {name} " + "=" * (60 - len(name)), flush=True)
+        t0 = time.time()
+        try:
+            BENCHES[name]()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"\nFAILED: {failed}")
+        sys.exit(1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""The Training module in action (paper Sect. 3.2).
+
+Shows online size estimation converging: initial xi-weighted guesses from
+recent-task statistics, provisional refits on every sample observation,
+Delta-based early estimates for long REDUCE tasks, and the Fig. 6
+robustness experiment in miniature.
+
+Run:  PYTHONPATH=src python examples/size_estimation.py
+"""
+
+from repro.core import (
+    ClusterSpec,
+    HFSPConfig,
+    HFSPScheduler,
+    JobSpec,
+    Phase,
+    Simulator,
+    TaskSpec,
+)
+
+
+def estimation_trace() -> None:
+    print("=== estimate convergence " + "=" * 40)
+    cluster = ClusterSpec(num_machines=4, map_slots_per_machine=2,
+                          reduce_slots_per_machine=2)
+    job = JobSpec(
+        job_id=0, arrival_time=0.0,
+        map_tasks=tuple(TaskSpec(0, Phase.MAP, i, 12.0) for i in range(20)),
+        reduce_tasks=tuple(TaskSpec(0, Phase.REDUCE, i, 90.0) for i in range(4)),
+    )
+    sch = HFSPScheduler(cluster, HFSPConfig(delta=30.0))
+    sim = Simulator(cluster, sch, [job])
+
+    # Sample the estimate as the simulation advances.
+    checkpoints = [1.0, 13.0, 40.0, 80.0, 200.0]
+    for t in checkpoints:
+        sim.run(until=t)
+        js = sch.jobs.get(0)
+        if js is None:
+            continue
+        est_m = js.est_size.get(Phase.MAP)
+        est_r = js.est_size.get(Phase.REDUCE)
+        print(f"  t={t:6.1f}s  MAP est {est_m and round(est_m):>6} "
+              f"(true 240)   REDUCE est {est_r and round(est_r)} (true 360)")
+    sim.run()
+    print(f"  job completed at t={sim.result.completion[0]:.1f}s\n")
+
+
+def robustness_mini() -> None:
+    print("=== Fig. 6 in miniature: error injection " + "=" * 24)
+    from repro.workload import fb_cluster, fb_dataset
+    import dataclasses
+
+    for alpha in (0.0, 0.5, 1.0):
+        cluster = fb_cluster(num_machines=50)
+        jobs, _ = fb_dataset(seed=3, num_jobs=50)
+        jobs = [dataclasses.replace(j, reduce_tasks=()) for j in jobs]
+        sch = HFSPScheduler(cluster, HFSPConfig(error_alpha=alpha))
+        res = Simulator(cluster, sch, jobs).run()
+        print(f"  alpha={alpha:.1f}: mean sojourn {res.mean_sojourn():7.1f}s")
+    print("  -> sojourn times degrade only mildly with huge estimate errors")
+
+
+if __name__ == "__main__":
+    estimation_trace()
+    robustness_mini()

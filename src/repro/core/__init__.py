@@ -1,0 +1,46 @@
+"""The paper's primary contribution: size-based scheduling (HFSP) with
+online size estimation, a virtual PS cluster, and preemption primitives,
+plus the FIFO/FAIR baselines and the discrete-event simulator."""
+
+from repro.core.estimator import (
+    DistributionFitEstimator,
+    FirstOrderEstimator,
+    TrainingModule,
+)
+from repro.core.fair import FairScheduler
+from repro.core.fifo import FIFOScheduler
+from repro.core.hfsp import HFSPConfig, HFSPScheduler
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.simulator import SimResult, Simulator
+from repro.core.types import (
+    ClusterSpec,
+    JobSpec,
+    JobState,
+    Phase,
+    Preemption,
+    TaskSpec,
+)
+from repro.core.vcluster import VirtualCluster, max_min_allocation, project_finish_times
+
+__all__ = [
+    "ClusterSpec",
+    "DistributionFitEstimator",
+    "FIFOScheduler",
+    "FairScheduler",
+    "FirstOrderEstimator",
+    "HFSPConfig",
+    "HFSPScheduler",
+    "JobSpec",
+    "JobState",
+    "Phase",
+    "Preemption",
+    "Scheduler",
+    "SchedulerConfig",
+    "SimResult",
+    "Simulator",
+    "TaskSpec",
+    "TrainingModule",
+    "VirtualCluster",
+    "max_min_allocation",
+    "project_finish_times",
+]

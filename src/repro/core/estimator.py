@@ -1,0 +1,283 @@
+"""Job size estimation — the Training module (Sect. 3.2).
+
+Size-based scheduling needs job sizes, which are unknown a priori.  HFSP
+estimates them online:
+
+* the *initial estimate* of a phase is ``num_tasks x mean-recent-task-time
+  x xi`` where xi in [1, inf) is the confidence parameter (Sect. 3.1.1);
+* a *sample set* of ``s`` tasks (s=5 in the paper) is executed under a fair
+  share granted by the top-level scheduler; their measured runtimes are fed
+  to a *pluggable estimator* that fits a task-time CDF by least-squares
+  regression against a reference distribution family (Sect. 3.2.1);
+* REDUCE tasks can be orders of magnitude longer than MAP tasks, so their
+  runtime is estimated *before completion* as ``sigma = Delta / p`` where
+  ``p`` is the fraction of input processed after ``Delta`` seconds of
+  execution (Delta = 60 s in the paper) — p embeds input-size skew.
+
+Estimators return a full per-task duration *vector* (the paper's
+``M_i = [sigma(m_1), sigma(m_2), ...]``); the phase size estimate is its sum.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Protocol
+
+import numpy as np
+
+from repro.core.types import JobState, Phase, TaskState
+
+
+# ---------------------------------------------------------------------------
+# Pluggable task-time distribution estimators (Sect. 3.2.1)
+# ---------------------------------------------------------------------------
+class TaskTimeEstimator(Protocol):
+    """Fit a task-time distribution from sample runtimes and extrapolate."""
+
+    def fit_vector(self, samples: list[float], num_tasks: int) -> list[float]:
+        """Return estimated durations for all ``num_tasks`` tasks."""
+        ...
+
+
+class FirstOrderEstimator:
+    """Mean-based estimator (what the paper's experiments use: 'first order
+    statistic estimators that assume uniformly distributed task sizes')."""
+
+    def fit_vector(self, samples: list[float], num_tasks: int) -> list[float]:
+        if not samples:
+            return [math.inf] * num_tasks
+        mu = float(np.mean(samples))
+        return [mu] * num_tasks
+
+
+@dataclass
+class DistributionFitEstimator:
+    """Least-squares CDF regression against a reference family (Sect. 3.2.1).
+
+    ``family`` picks the reference task-time distribution; parameters are
+    fit by minimizing squared error between the model CDF and the empirical
+    CDF of the samples.  The estimated CDF is then inverted at the
+    mid-quantiles ``(k + 0.5)/n`` to produce the per-task duration vector.
+    """
+
+    family: str = "lognormal"  # uniform | exponential | lognormal | weibull
+
+    def fit_vector(self, samples: list[float], num_tasks: int) -> list[float]:
+        if not samples:
+            return [math.inf] * num_tasks
+        xs = np.sort(np.asarray(samples, dtype=np.float64))
+        xs = np.maximum(xs, 1e-9)
+        n = len(xs)
+        # Empirical CDF at the sample points (Hazen plotting positions).
+        ecdf = (np.arange(1, n + 1) - 0.5) / n
+        q = (np.arange(num_tasks) + 0.5) / num_tasks
+        if self.family == "uniform" or n == 1:
+            # U(a, b): LS fit degenerates to moment matching on order stats.
+            a, b = self._fit_uniform(xs, ecdf)
+            vec = a + q * (b - a)
+        elif self.family == "exponential":
+            # F(x) = 1 - exp(-x/mu): -log(1-F) = x/mu -> LS through origin.
+            y = -np.log1p(-np.clip(ecdf, 0, 1 - 1e-9))
+            mu = float(np.dot(xs, y) / max(np.dot(y, y), 1e-30))
+            vec = -mu * np.log1p(-np.clip(q, 0, 1 - 1e-12))
+        elif self.family == "weibull":
+            # log(-log(1-F)) = k log x - k log lam -> linear LS.
+            y = np.log(-np.log1p(-np.clip(ecdf, 0, 1 - 1e-9)))
+            k, c = np.polyfit(np.log(xs), y, 1)
+            k = max(float(k), 1e-3)
+            lam = math.exp(-float(c) / k)
+            vec = lam * (-np.log1p(-np.clip(q, 0, 1 - 1e-12))) ** (1.0 / k)
+        else:  # lognormal: Phi^-1(F) = (log x - m)/s -> linear LS.
+            y = _norm_ppf(np.clip(ecdf, 1e-9, 1 - 1e-9))
+            s, m = np.polyfit(y, np.log(xs), 1)
+            vec = np.exp(m + s * _norm_ppf(np.clip(q, 1e-12, 1 - 1e-12)))
+        vec = np.maximum(np.asarray(vec, dtype=np.float64), 1e-9)
+        return [float(v) for v in vec]
+
+    @staticmethod
+    def _fit_uniform(xs: np.ndarray, ecdf: np.ndarray) -> tuple[float, float]:
+        # LS fit of F(x) = (x-a)/(b-a) over the samples.
+        slope, intercept = np.polyfit(xs, ecdf, 1) if len(xs) > 1 else (0.0, 0.0)
+        if slope <= 1e-12:
+            lo = hi = float(np.mean(xs))
+            return lo, hi
+        a = -intercept / slope
+        b = a + 1.0 / slope
+        return min(a, float(xs[0])), max(b, float(xs[-1]))
+
+
+def _norm_ppf(p: np.ndarray) -> np.ndarray:
+    """Acklam's rational approximation of the standard normal inverse CDF
+    (numpy-only; scipy is not available in this environment)."""
+    a = [-3.969683028665376e01, 2.209460984245205e02, -2.759285104469687e02,
+         1.383577518672690e02, -3.066479806614716e01, 2.506628277459239e00]
+    b = [-5.447609879822406e01, 1.615858368580409e02, -1.556989798598866e02,
+         6.680131188771972e01, -1.328068155288572e01]
+    c = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e00,
+         -2.549732539343734e00, 4.374664141464968e00, 2.938163982698783e00]
+    d = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e00,
+         3.754408661907416e00]
+    p = np.asarray(p, dtype=np.float64)
+    out = np.empty_like(p)
+    plow, phigh = 0.02425, 1 - 0.02425
+    lo = p < plow
+    hi = p > phigh
+    mid = ~(lo | hi)
+    if np.any(lo):
+        qq = np.sqrt(-2 * np.log(p[lo]))
+        out[lo] = (((((c[0] * qq + c[1]) * qq + c[2]) * qq + c[3]) * qq + c[4]) * qq + c[5]) / (
+            (((d[0] * qq + d[1]) * qq + d[2]) * qq + d[3]) * qq + 1
+        )
+    if np.any(hi):
+        qq = np.sqrt(-2 * np.log(1 - p[hi]))
+        out[hi] = -(((((c[0] * qq + c[1]) * qq + c[2]) * qq + c[3]) * qq + c[4]) * qq + c[5]) / (
+            (((d[0] * qq + d[1]) * qq + d[2]) * qq + d[3]) * qq + 1
+        )
+    if np.any(mid):
+        qq = p[mid] - 0.5
+        r = qq * qq
+        out[mid] = (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * qq / (
+            ((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Recent-task statistics (for the xi-weighted initial estimate, Sect. 3.1.1)
+# ---------------------------------------------------------------------------
+@dataclass
+class RecentTaskStats:
+    """Rolling mean of recently-completed task durations, per phase."""
+
+    window: int = 50
+    default: float = 30.0  # cold-start guess (seconds) before any completion
+    _hist: dict[Phase, deque] = field(default_factory=dict)
+
+    def observe(self, phase: Phase, duration: float) -> None:
+        self._hist.setdefault(phase, deque(maxlen=self.window)).append(duration)
+
+    def mean(self, phase: Phase) -> float:
+        h = self._hist.get(phase)
+        return float(np.mean(h)) if h else self.default
+
+
+# ---------------------------------------------------------------------------
+# The Training module (Sect. 3.2)
+# ---------------------------------------------------------------------------
+@dataclass
+class _PhaseTraining:
+    sample_keys: list[tuple] = field(default_factory=list)
+    observed: dict[tuple, float] = field(default_factory=dict)
+    done: bool = False
+
+
+@dataclass
+class TrainingModule:
+    """Drives per-job size estimation; acts as a sub-scheduler fed slots by
+    the top-level scheduler (Sect. 3.1.1).
+
+    Parameters mirror the paper's Sect. 4.1 configuration: sample set size
+    ``t`` = 5 for both phases, ``Delta`` = 60 s, confidence ``xi`` = 1.
+    """
+
+    sample_set_size: int = 5
+    delta: float = 60.0
+    xi: float = 1.0
+    estimator: TaskTimeEstimator = field(default_factory=FirstOrderEstimator)
+    recent: RecentTaskStats = field(default_factory=RecentTaskStats)
+    _training: dict[tuple[int, Phase], _PhaseTraining] = field(default_factory=dict)
+
+    # -- lifecycle -----------------------------------------------------------
+    def start_phase(self, job: JobState, phase: Phase) -> float:
+        """Begin training for a job phase; return the initial size estimate.
+
+        Initial estimate = num_tasks x mean recent task duration x xi.
+        xi = inf parks the job at the back of the queue until trained.
+        """
+        tasks = job.spec.tasks(phase)
+        st = _PhaseTraining()
+        st.sample_keys = [t.key for t in tasks[: self.sample_set_size]]
+        if not tasks:
+            st.done = True
+        self._training[(job.spec.job_id, phase)] = st
+        job.in_training[phase] = not st.done
+        if not tasks:
+            return 0.0
+        if math.isinf(self.xi):
+            return math.inf
+        return len(tasks) * self.recent.mean(phase) * self.xi
+
+    def is_training(self, job_id: int, phase: Phase) -> bool:
+        st = self._training.get((job_id, phase))
+        return st is not None and not st.done
+
+    def sample_keys(self, job_id: int, phase: Phase) -> list[tuple]:
+        st = self._training.get((job_id, phase))
+        return list(st.sample_keys) if st else []
+
+    def wanted_sample_tasks(self, job: JobState, phase: Phase) -> list[tuple]:
+        """Sample-set tasks not yet dispatched (the slots this module asks
+        the top-level scheduler for)."""
+        st = self._training.get((job.spec.job_id, phase))
+        if st is None or st.done:
+            return []
+        out = []
+        for key in st.sample_keys:
+            att = job.tasks[key]
+            if att.state is TaskState.PENDING and key not in st.observed:
+                out.append(key)
+        return out
+
+    # -- observations ----------------------------------------------------------
+    def observe_completion(self, job: JobState, phase: Phase, key: tuple,
+                           duration: float) -> float | None:
+        """Record a finished task; returns the new phase-size estimate when
+        the sample set completes, else None."""
+        self.recent.observe(phase, duration)
+        st = self._training.get((job.spec.job_id, phase))
+        if st is None or st.done:
+            return None
+        if key in st.sample_keys:
+            st.observed[key] = duration
+        return self._maybe_finalize(job, phase, st)
+
+    def observe_progress(self, job: JobState, phase: Phase, key: tuple,
+                         progress_fraction: float, elapsed: float) -> float | None:
+        """REDUCE-style early estimate: sigma = Delta / p (Sect. 3.2.1).
+
+        Called by the executor once a sample REDUCE task has run for
+        ``Delta`` seconds; ``progress_fraction`` is the fraction of its
+        input processed so far.
+        """
+        st = self._training.get((job.spec.job_id, phase))
+        if st is None or st.done or key not in st.sample_keys:
+            return None
+        if key in st.observed:
+            return None
+        p = max(progress_fraction, 1e-9)
+        st.observed[key] = elapsed / p
+        return self._maybe_finalize(job, phase, st)
+
+    def _maybe_finalize(self, job: JobState, phase: Phase,
+                        st: _PhaseTraining) -> float | None:
+        """Refit the phase-size estimate after EVERY observation.
+
+        Waiting for the full sample set before producing any estimate is
+        fragile: if sample tasks get suspended under load, the job would
+        keep a stale (often badly low) initial estimate, sort first
+        forever, and preempt the very jobs that should run before it.
+        Partial-sample estimates are provisional; training completes (and
+        stops consuming Training-module slots) at ``sample_set_size``
+        observations as in the paper."""
+        n_needed = min(self.sample_set_size, len(job.spec.tasks(phase)))
+        if not st.observed:
+            return None
+        if len(st.observed) >= n_needed:
+            st.done = True
+            job.in_training[phase] = False
+        vec = self.estimator.fit_vector(
+            list(st.observed.values()), len(job.spec.tasks(phase))
+        )
+        return float(sum(vec))

@@ -1,0 +1,68 @@
+"""The Hadoop Fair Scheduler ("FAIR", Sect. 2.2), single pool, with delay
+scheduling [31].
+
+"When a slot on a machine is free and needs to be assigned a task, FAIR
+proceeds as follows: if there is any job below its minimum share, it
+schedules a task of that particular job.  Otherwise, FAIR schedules a task
+that belongs to the job that has received less resource, based on the
+notion of 'deficit'."
+
+With a single pool and default parameters the minimum share is 0, so the
+deficit rule drives everything: free slots go to the job whose running-task
+count is furthest below its max-min fair share.  No preemption.
+
+Per pass, each job is granted up to its (max-min) fair target in deficit
+order — equivalent to the slot-at-a-time deficit rule but one sort per
+pass instead of one per slot.
+"""
+
+from __future__ import annotations
+
+from repro.core.scheduler import Action, ClusterView, Scheduler
+from repro.core.types import Phase
+from repro.core.vcluster import discrete_allocation
+
+
+class FairScheduler(Scheduler):
+    name = "fair"
+
+    def schedule(self, view: ClusterView, now: float) -> list[Action]:
+        self._begin_pass()
+        actions: list[Action] = []
+        for phase in (Phase.MAP, Phase.REDUCE):
+            free = view.free_slots(phase)
+            if not free:
+                continue
+            jobs = self.live_jobs(phase)
+            if not jobs:
+                continue
+            demands = {
+                js.spec.job_id: (self._demand(js, phase), js.spec.weight)
+                for js in jobs
+            }
+            # Equal-share max-min targets over *total* slots.
+            targets = discrete_allocation(
+                demands,
+                self.cluster.slots(phase),
+                {js.spec.job_id: 0 for js in jobs},  # no small-first bias
+            )
+            # Deficit order: furthest below fair target first, FIFO ties.
+            by_id = {js.spec.job_id: js for js in jobs}
+            order = sorted(
+                by_id,
+                key=lambda j: (
+                    -(targets[j] - by_id[j].n_running(phase)),
+                    by_id[j].spec.arrival_time,
+                    j,
+                ),
+            )
+            for j in order:
+                if not free:
+                    break
+                js = by_id[j]
+                deficit = targets[j] - js.n_running(phase)
+                if deficit <= 0:
+                    continue
+                acts, free = self._assign_pending(js, phase, free, deficit, now)
+                actions.extend(acts)
+        return actions

@@ -1,0 +1,36 @@
+"""The default Hadoop scheduler: FIFO with optional priorities (Sect. 2.2).
+
+"Task assignment is accomplished by scanning through all jobs that are
+waiting to be scheduled, in order of priority and job submission time."
+No preemption; delay scheduling is NOT part of the stock FIFO scheduler
+(it greedily prefers local tasks among the chosen job's pending tasks but
+never waits)."""
+
+from __future__ import annotations
+
+from repro.core.scheduler import Action, ClusterView, Scheduler, SchedulerConfig, job_sort_key_fifo
+from repro.core.types import ClusterSpec, Phase
+
+
+class FIFOScheduler(Scheduler):
+    name = "fifo"
+
+    def __init__(self, cluster: ClusterSpec, config: SchedulerConfig | None = None):
+        cfg = config or SchedulerConfig()
+        # Stock FIFO greedily picks local tasks but never delays a slot.
+        cfg.locality_max_skips = 0
+        super().__init__(cluster, cfg)
+
+    def schedule(self, view: ClusterView, now: float) -> list[Action]:
+        self._begin_pass()
+        actions: list[Action] = []
+        for phase in (Phase.MAP, Phase.REDUCE):
+            free = view.free_slots(phase)
+            if not free:
+                continue
+            for js in sorted(self.live_jobs(phase), key=job_sort_key_fifo):
+                if not free:
+                    break
+                acts, free = self._assign_pending(js, phase, free, len(free), now)
+                actions.extend(acts)
+        return actions

@@ -1,0 +1,555 @@
+"""The Hadoop Fair Sojourn Protocol scheduler (Sect. 3).
+
+HFSP is a *hierarchical* scheduler (Sect. 3.1.1):
+
+* the **top-level scheduler** balances slots between the Training module
+  (job size estimation, Sect. 3.2) and the job scheduler;
+* the **job scheduler** ranks jobs by their projected finish time under a
+  simulated max-min-fair processor-sharing discipline (the *virtual
+  cluster*, Sect. 3.1) and focuses real cluster resources on the jobs that
+  would finish first, preempting jobs that would finish later;
+* **preemption** (Sect. 3.3) is EAGER (suspend/resume), WAIT (drain) or
+  KILL, with a hysteresis fallback EAGER->WAIT when too much task state is
+  suspended ("Finite machine resources").
+
+Interaction rules between delay scheduling and preemption (these matter —
+naive composition causes suspend/resume thrash):
+
+* a job that *voluntarily declined* free slots this pass (delay
+  scheduling, hoping for data locality) must NOT preempt other jobs in the
+  same pass — preemption is for jobs that genuinely cannot be served;
+* slots freed *by* preemption are assigned immediately, bypassing the
+  delay-scheduling wait (locality was already forfeited by deciding to
+  preempt).
+
+The scheduler is pure decision logic: it runs unmodified under the
+discrete-event simulator (:mod:`repro.core.simulator`, the paper's Mumak
+analogue) and under the JAX gang runtime (:mod:`repro.runtime`).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.core.estimator import (
+    FirstOrderEstimator,
+    TaskTimeEstimator,
+    TrainingModule,
+)
+from repro.core.scheduler import (
+    Action,
+    ClusterView,
+    Kill,
+    Resume,
+    Scheduler,
+    SchedulerConfig,
+    Suspend,
+)
+from repro.core.types import (
+    ClusterSpec,
+    JobSpec,
+    JobState,
+    Phase,
+    Preemption,
+    SlotKey,
+    TaskAttempt,
+    TaskState,
+)
+from repro.core.vcluster import VirtualCluster
+
+
+@dataclass
+class HFSPConfig(SchedulerConfig):
+    """Paper defaults (Sect. 4.1): sample set 5, Delta = 60 s, xi = 1,
+    Training module may use the whole cluster, eager preemption on."""
+
+    preemption: Preemption = Preemption.EAGER
+    sample_set_size: int = 5
+    delta: float = 60.0
+    xi: float = 1.0
+    # Max slots the top-level scheduler grants the Training module (Sect.
+    # 3.2: bounded "to avoid starvation in the job scheduler, for workloads
+    # with bursty arrivals").  None = all slots (the paper's configuration).
+    max_training_slots: int | None = None
+    estimator_factory: Callable[[], TaskTimeEstimator] = FirstOrderEstimator
+    # Multiplicative error injected into finalized size estimates, used by
+    # the Fig. 6 robustness experiment: a wrong estimate is drawn uniformly
+    # in [size*(1-alpha), size*(1+alpha)].
+    error_alpha: float = 0.0
+    error_seed: int = 0
+
+
+class HFSPScheduler(Scheduler):
+    name = "hfsp"
+
+    def __init__(self, cluster: ClusterSpec, config: HFSPConfig | None = None):
+        cfg = config or HFSPConfig()
+        super().__init__(cluster, cfg)
+        self.config: HFSPConfig = cfg
+        self.training = TrainingModule(
+            sample_set_size=cfg.sample_set_size,
+            delta=cfg.delta,
+            xi=cfg.xi,
+            estimator=cfg.estimator_factory(),
+        )
+        self.vc: dict[Phase, VirtualCluster] = {
+            p: VirtualCluster(phase=p, slots=cluster.slots(p))
+            for p in (Phase.MAP, Phase.REDUCE)
+        }
+        self._clock = 0.0
+        self._eager_enabled = True  # hysteresis state (Sect. 3.3)
+        if cfg.error_alpha > 0:
+            import numpy as _np
+
+            self._err_rng = _np.random.default_rng(cfg.error_seed)
+        else:
+            self._err_rng = None
+
+    # ------------------------------------------------------------------
+    # Aging (Sect. 3.1): each event distributes elapsed time as progress
+    # to every allocated virtual task.
+    # ------------------------------------------------------------------
+    def _advance(self, now: float) -> None:
+        dt = now - self._clock
+        if dt > 0:
+            for vc in self.vc.values():
+                vc.age(dt)
+            self._clock = now
+
+    # ------------------------------------------------------------------
+    # Events
+    # ------------------------------------------------------------------
+    def on_job_arrival(self, spec: JobSpec, now: float) -> JobState:
+        self._advance(now)
+        js = super().on_job_arrival(spec, now)
+        self._start_phase(js, Phase.MAP)
+        self._maybe_unlock_reduce(js)
+        return js
+
+    def _perturb(self, est: float) -> float:
+        """Fig. 6 error injection on *finalized* estimates."""
+        if self._err_rng is None or not math.isfinite(est):
+            return est
+        a = self.config.error_alpha
+        return float(est * self._err_rng.uniform(1.0 - a, 1.0 + a))
+
+    def _start_phase(self, js: JobState, phase: Phase) -> None:
+        tasks = js.spec.tasks(phase)
+        est = self.training.start_phase(js, phase)
+        js.est_size[phase] = est
+        if tasks:
+            self.vc[phase].add_job(
+                js.spec.job_id, est, len(tasks), weight=js.spec.weight
+            )
+
+    def _maybe_unlock_reduce(self, js: JobState) -> None:
+        if (
+            js.spec.reduce_tasks
+            and js.spec.job_id not in self.vc[Phase.REDUCE]
+            and Phase.REDUCE not in js.est_size
+            and js.reduce_unlocked()
+        ):
+            self._start_phase(js, Phase.REDUCE)
+
+    def on_task_complete(self, job_id: int, key: tuple, now: float) -> None:
+        self._advance(now)
+        js = self.jobs.get(job_id)
+        if js is None:
+            return
+        phase = Phase(key[1])
+        att = js.tasks[key]
+        new_est = self.training.observe_completion(
+            js, phase, key, att.spec.duration
+        )
+        vc = self.vc[phase]
+        if new_est is not None:
+            new_est = self._perturb(new_est)
+            js.est_size[phase] = new_est
+            vc.set_size(job_id, new_est)
+        if js.n_unfinished(phase) == 0:
+            vc.remove_job(job_id)
+        # NOTE: real task completions do NOT shrink the virtual cap — the
+        # virtual cluster is a pure PS simulation (see vcluster docstring).
+        if phase is Phase.MAP:
+            self._maybe_unlock_reduce(js)
+
+    def on_task_progress(
+        self, job_id: int, key: tuple, fraction: float, elapsed: float, now: float
+    ) -> None:
+        """REDUCE-style early size estimation: sigma = Delta / p (Sect. 3.2.1)."""
+        self._advance(now)
+        js = self.jobs.get(job_id)
+        if js is None:
+            return
+        phase = Phase(key[1])
+        new_est = self.training.observe_progress(js, phase, key, fraction, elapsed)
+        if new_est is not None:
+            new_est = self._perturb(new_est)
+            js.est_size[phase] = new_est
+            self.vc[phase].set_size(job_id, new_est)
+
+    def on_job_complete(self, job_id: int, now: float) -> None:
+        self._advance(now)
+        super().on_job_complete(job_id, now)
+        for vc in self.vc.values():
+            vc.remove_job(job_id)
+        self._skip_counts.pop(job_id, None)
+
+    def on_tick(self, now: float) -> None:
+        self._advance(now)
+
+    # ------------------------------------------------------------------
+    # Scheduling
+    # ------------------------------------------------------------------
+    def schedule(self, view: ClusterView, now: float) -> list[Action]:
+        self._advance(now)
+        self._begin_pass()
+        self._update_hysteresis(view)
+        actions: list[Action] = []
+        for phase in (Phase.MAP, Phase.REDUCE):
+            actions.extend(self._phase_schedule(view, phase, now))
+        return actions
+
+    def _update_hysteresis(self, view: ClusterView) -> None:
+        """EAGER -> WAIT fallback on suspended-state pressure (Sect. 3.3)."""
+        total = view.total_suspended_bytes()
+        if self._eager_enabled and total > self.cluster.suspend_bytes_hi:
+            self._eager_enabled = False
+            self.stats.hysteresis_fallbacks += 1
+        elif not self._eager_enabled and total < self.cluster.suspend_bytes_lo:
+            self._eager_enabled = True
+
+    def _phase_schedule(
+        self, view: ClusterView, phase: Phase, now: float
+    ) -> list[Action]:
+        actions: list[Action] = []
+        live = {js.spec.job_id: js for js in self.live_jobs(phase)}
+        if not live:
+            return actions
+        free = list(view.free_slots(phase))
+        # Jobs ranked by projected PS finish time (Sect. 3.1).  Jobs whose
+        # phase is live but unknown to the virtual cluster (zero tasks)
+        # cannot appear here; jobs with infinite estimates sort last.
+        order = [j for j in self.vc[phase].schedule_order(now) if j in live]
+        pos_of = {j: i for i, j in enumerate(order)}
+
+        # Pass-wide victim indices (running tasks of live jobs), built
+        # LAZILY — most passes never preempt, and building the indices is
+        # the single most expensive part of a pass.
+        # run_by_machine[m] = [(pos, att)] sorted ascending by pos — victims
+        # are taken from the END (largest projected finish first, which the
+        # paper phrases as "jobs sorted in decreasing order of their size").
+        slot_of: dict[tuple, SlotKey] = {}
+        run_by_machine: dict[int, list[tuple[int, TaskAttempt]]] = {}
+        run_by_job: dict[int, list[TaskAttempt]] = {}
+        indices_built = False
+
+        def ensure_indices() -> None:
+            nonlocal indices_built
+            if indices_built:
+                return
+            indices_built = True
+            for slot, att in view.occupied_slots(phase).items():
+                slot_of[att.spec.key] = slot
+                p = pos_of.get(att.spec.job_id)
+                if p is None:
+                    continue  # job not live in this phase (shouldn't happen)
+                run_by_machine.setdefault(slot.machine, []).append((p, att))
+                run_by_job.setdefault(att.spec.job_id, []).append(att)
+            for lst in run_by_machine.values():
+                lst.sort(key=lambda t: t[0])
+
+        eager_ok = (
+            self.config.preemption is Preemption.EAGER and self._eager_enabled
+        )
+        protected = self._protected_keys(live, phase)
+
+        # -- 1. Top-level scheduler: Training-module slots first.  "The
+        # top-level scheduler responds to the arrival of a new job by
+        # allocating a given set of resources to the Training module"
+        # (Sect. 3.1.1) — under full load that requires preempting up to
+        # the training job's fair share.
+        acts, free = self._schedule_training(
+            live, order, phase, free, now,
+            ensure_indices, run_by_job, slot_of, eager_ok, protected,
+        )
+        actions.extend(acts)
+
+        # -- 2. Job scheduler: focus resources in projected-finish order ---
+        for pos, jid in enumerate(order):
+            js = live[jid]
+            # Resume suspended tasks in place (Sect. 3.3 locality), possibly
+            # suspending tasks of *later-ordered* jobs on the same machine.
+            if js.n_suspended(phase):
+                ensure_indices()
+                acts, free = self._resume_with_preemption(
+                    js, pos, phase, free, run_by_machine, slot_of, eager_ok,
+                    protected,
+                )
+                actions.extend(acts)
+            # Start pending tasks on free slots (delay scheduling inside).
+            n_delayed_before = self.stats.delay_sched_waits
+            acts, free = self._assign_pending(js, phase, free, len(free), now)
+            actions.extend(acts)
+            delayed = self.stats.delay_sched_waits > n_delayed_before
+            # Preempt later jobs for remaining unmet demand — but never on
+            # behalf of a job that just declined slots to wait for locality.
+            unmet = self._unclaimed_pending(js, phase)
+            if unmet > 0 and not free and not delayed:
+                ensure_indices()
+                acts, freed = self._preempt_for(
+                    js, pos, phase, unmet, order, run_by_job, slot_of,
+                    eager_ok, protected,
+                )
+                actions.extend(acts)
+                if freed:
+                    # Bypass delay scheduling: locality was forfeited when we
+                    # chose to preempt.
+                    saved = self.config.locality_enabled
+                    self.config.locality_enabled = False
+                    try:
+                        acts, left = self._assign_pending(
+                            js, phase, freed, len(freed), now
+                        )
+                    finally:
+                        self.config.locality_enabled = saved
+                    actions.extend(acts)
+                    free.extend(left)
+        return actions
+
+    # -- training module (Sect. 3.2) -----------------------------------
+    def _schedule_training(
+        self,
+        live: dict[int, JobState],
+        order: list[int],
+        phase: Phase,
+        free: list[SlotKey],
+        now: float,
+        ensure_indices,
+        run_by_job: dict,
+        slot_of: dict,
+        eager_ok: bool,
+        protected: set,
+    ) -> tuple[list[Action], list[SlotKey]]:
+        actions: list[Action] = []
+        training_jobs = [
+            live[j] for j in live if self.training.is_training(j, phase)
+        ]
+        if not training_jobs:
+            return actions, free
+        # "Execution slots are assigned according to a 'fewer remaining
+        # tasks' discipline, which implies short jobs are given priority."
+        training_jobs.sort(
+            key=lambda js: (js.n_unfinished(phase), js.spec.arrival_time)
+        )
+        budget = self._training_budget(live, phase)
+        fair = max(1, self.cluster.slots(phase) // max(len(live), 1))
+        mode = self.config.preemption
+        can_preempt = not (
+            mode is Preemption.WAIT
+            or (mode is Preemption.EAGER and not eager_ok)
+        )
+        for js in training_jobs:
+            wanted = self.training.wanted_sample_tasks(js, phase)
+            if not wanted:
+                continue
+            quota = min(len(wanted), fair)
+            # Free-slot assignments consume the global training budget;
+            # preemption below merely SUBSTITUTES one training slot for
+            # another, so it is not budget-gated.
+            acts, free = self._assign_pending(
+                js, phase, free, min(quota, max(budget, 0)), now,
+                only_keys=wanted,
+            )
+            self.stats.training_tasks += len(acts)
+            budget -= len(acts)
+            quota -= len(acts)
+            actions.extend(acts)
+            # In-flight sample tasks count toward the fair share already
+            # granted; only preempt for the genuinely unmet remainder.
+            running_samples = sum(
+                1
+                for k in self.training.sample_keys(js.spec.job_id, phase)
+                if js.tasks[k].state is TaskState.RUNNING
+            )
+            unmet = min(quota, max(0, fair - running_samples))
+            if unmet > 0 and not free and can_preempt:
+                ensure_indices()
+                # Victims: last-ordered (largest) jobs first, never self.
+                pos_self = order.index(js.spec.job_id)
+                acts, freed = self._preempt_for(
+                    js, -1, phase, unmet,
+                    [j for j in order if j != js.spec.job_id],
+                    run_by_job, slot_of, eager_ok, protected,
+                )
+                actions.extend(acts)
+                if freed:
+                    saved = self.config.locality_enabled
+                    self.config.locality_enabled = False
+                    try:
+                        a2, left = self._assign_pending(
+                            js, phase, freed, len(freed), now,
+                            only_keys=self.training.wanted_sample_tasks(js, phase),
+                        )
+                    finally:
+                        self.config.locality_enabled = saved
+                    self.stats.training_tasks += len(a2)
+                    budget -= len(a2)
+                    actions.extend(a2)
+                    free.extend(left)
+        return actions, free
+
+    def _training_budget(self, live: dict[int, JobState], phase: Phase) -> int:
+        cap = self.config.max_training_slots
+        if cap is None:
+            cap = self.cluster.slots(phase)
+        # Slots currently held by still-training sample tasks count against
+        # the budget (sample sets are <= 5 keys: check task state directly).
+        in_flight = 0
+        for js in live.values():
+            if not self.training.is_training(js.spec.job_id, phase):
+                continue
+            for k in self.training.sample_keys(js.spec.job_id, phase):
+                if js.tasks[k].state is TaskState.RUNNING:
+                    in_flight += 1
+        return max(0, cap - in_flight)
+
+    # -- preemption (Sect. 3.3) ------------------------------------------
+    def _protected_keys(self, live: dict, phase: Phase) -> set:
+        """Running sample tasks shielded from preemption.  The Training
+        module holds "at least a fair share" (Sect. 3.1.1) — a QUOTA of
+        slots/num_jobs per training job, NOT blanket immunity (protecting
+        every sample task would let one big in-training job starve a tiny
+        arrival for a full task length)."""
+        # Integer fair share, floored at 1: a running sample task is ALWAYS
+        # shielded — two in-training jobs may otherwise kill each other's
+        # samples every pass (progress resets under KILL => livelock).
+        quota = max(1, self.cluster.slots(phase) // max(len(live), 1))
+        out: set = set()
+        for jid, js in live.items():
+            if not self.training.is_training(jid, phase):
+                continue
+            shielded = 0
+            for key in self.training.sample_keys(jid, phase):
+                if shielded >= quota:
+                    break
+                if js.tasks[key].state is TaskState.RUNNING:
+                    out.add(key)
+                    shielded += 1
+        return out
+
+    def _preempt_for(
+        self,
+        js: JobState,
+        pos: int,
+        phase: Phase,
+        unmet: int,
+        order: list[int],
+        run_by_job: dict[int, list[TaskAttempt]],
+        slot_of: dict[tuple, SlotKey],
+        eager_ok: bool,
+        protected: set,
+    ) -> tuple[list[Action], list[SlotKey]]:
+        """Free up to ``unmet`` slots held by later-ordered jobs, walking the
+        order from the back (largest projected finish / size first)."""
+        actions: list[Action] = []
+        freed: list[SlotKey] = []
+        mode = self.config.preemption
+        wait_mode = mode is Preemption.WAIT or (
+            mode is Preemption.EAGER and not eager_ok
+        )
+        for vjid in reversed(order[pos + 1 :]):
+            if unmet <= 0:
+                break
+            victims = run_by_job.get(vjid, ())
+            if victims and self.training.is_training(vjid, phase):
+                # Prefer non-sample tasks: suspending a sample silently
+                # cancels its runtime observation and stalls estimation.
+                sample = set(self.training.sample_keys(vjid, phase))
+                victims = sorted(
+                    victims, key=lambda a: a.spec.key in sample
+                )
+            for att in victims:
+                if unmet <= 0:
+                    break
+                key = att.spec.key
+                if (
+                    key in self._claimed
+                    or att.state is not TaskState.RUNNING
+                    or key in protected
+                ):
+                    continue
+                if wait_mode:
+                    self.stats.waits += 1
+                    unmet -= 1  # we *would* preempt; count and move on
+                    continue
+                slot = slot_of.get(key)
+                if slot is None:
+                    continue
+                self._claimed.add(key)
+                if mode is Preemption.EAGER:
+                    actions.append(Suspend(att))
+                    self.stats.suspensions += 1
+                else:  # KILL
+                    actions.append(Kill(att))
+                    self.stats.kills += 1
+                freed.append(slot)
+                unmet -= 1
+        return actions, freed
+
+    def _resume_with_preemption(
+        self,
+        js: JobState,
+        pos: int,
+        phase: Phase,
+        free: list[SlotKey],
+        run_by_machine: dict[int, list[tuple[int, TaskAttempt]]],
+        slot_of: dict[tuple, SlotKey],
+        eager_ok: bool,
+        protected: set,
+    ) -> tuple[list[Action], list[SlotKey]]:
+        """Resume suspended tasks *on the machine that holds their state*
+        (Sect. 3.3 "Impact on data locality"): free slot if available, else
+        suspend a later-ordered job's task on that machine, else wait."""
+        actions: list[Action] = []
+        if not js.n_suspended(phase):
+            return actions, free
+        free = list(free)
+        for att in js.suspended(phase):
+            if att.spec.key in self._claimed:
+                continue
+            m = att.machine if att.machine is not None else -1
+            slot = next((s for s in free if s.machine == m), None)
+            if slot is not None:
+                free.remove(slot)
+                self._claimed.add(att.spec.key)
+                actions.append(Resume(att, slot))
+                self.stats.resumes += 1
+                continue
+            if not eager_ok:
+                continue
+            # Largest-position (latest-finishing) victim on this machine.
+            entries = run_by_machine.get(m, [])
+            for vpos, victim in reversed(entries):
+                if vpos <= pos:
+                    break  # all remaining victims are earlier-ordered: wait
+                vkey = victim.spec.key
+                if (
+                    vkey in self._claimed
+                    or victim.state is not TaskState.RUNNING
+                    or vkey in protected
+                ):
+                    continue
+                vslot = slot_of.get(vkey)
+                if vslot is None:
+                    continue
+                self._claimed.add(vkey)
+                actions.append(Suspend(victim))
+                self.stats.suspensions += 1
+                self._claimed.add(att.spec.key)
+                actions.append(Resume(att, vslot))
+                self.stats.resumes += 1
+                break
+        return actions, free

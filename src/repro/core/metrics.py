@@ -1,0 +1,56 @@
+"""Sojourn-time metrics and ECDF helpers consumed by the benchmarks."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.simulator import SimResult
+
+
+def ecdf(values: list[float]) -> tuple[np.ndarray, np.ndarray]:
+    """Empirical CDF: returns (sorted values, cumulative probabilities)."""
+    xs = np.sort(np.asarray(values, dtype=np.float64))
+    ps = np.arange(1, len(xs) + 1) / len(xs)
+    return xs, ps
+
+
+@dataclass
+class SojournSummary:
+    mean: float
+    median: float
+    p95: float
+    count: int
+
+    @classmethod
+    def of(cls, values: list[float]) -> "SojournSummary":
+        if not values:
+            return cls(0.0, 0.0, 0.0, 0)
+        a = np.asarray(values, dtype=np.float64)
+        return cls(
+            float(a.mean()), float(np.median(a)), float(np.percentile(a, 95)),
+            len(a),
+        )
+
+
+def per_class_sojourns(
+    result: SimResult, class_of: dict[int, str]
+) -> dict[str, list[float]]:
+    out: dict[str, list[float]] = {}
+    for jid, s in result.sojourn.items():
+        out.setdefault(class_of.get(jid, "?"), []).append(s)
+    return out
+
+
+def summarize(result: SimResult, class_of: dict[int, str]) -> dict[str, SojournSummary]:
+    per = per_class_sojourns(result, class_of)
+    out = {c: SojournSummary.of(v) for c, v in sorted(per.items())}
+    out["all"] = SojournSummary.of(list(result.sojourn.values()))
+    return out
+
+
+def per_job_delta(a: SimResult, b: SimResult) -> dict[int, float]:
+    """sojourn_a - sojourn_b per job (positive = b is better), Fig. 4."""
+    sa, sb = a.sojourn, b.sojourn
+    return {j: sa[j] - sb[j] for j in sa if j in sb}

@@ -1,0 +1,304 @@
+"""Scheduler framework.
+
+A scheduler is *pure decision logic*: it is driven by events
+(`on_job_arrival`, `on_task_complete`, ...) and, when asked, emits a list of
+:class:`Action` that an executor applies to the physical cluster.  The same
+scheduler object runs unmodified under
+
+* :mod:`repro.core.simulator` — the discrete-event simulator (the paper's
+  Mumak analogue), and
+* :mod:`repro.runtime`       — the JAX gang-scheduling runtime (the paper's
+  Amazon-cluster analogue).
+
+The executor exposes the physical state through the read-only
+:class:`ClusterView` protocol; schedulers keep their own per-job bookkeeping
+in :class:`~repro.core.types.JobState`.
+
+Every helper here is written to be cheap per scheduling pass: O(free slots
++ live jobs + emitted actions), never O(total tasks) — schedulers run on
+every simulator event.
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+from typing import Iterable, Protocol
+
+from repro.core.types import (
+    ClusterSpec,
+    JobSpec,
+    JobState,
+    Phase,
+    SchedulerStats,
+    SlotKey,
+    TaskAttempt,
+    TaskState,
+)
+
+
+# ---------------------------------------------------------------------------
+# Executor-side view & actions
+# ---------------------------------------------------------------------------
+class ClusterView(Protocol):
+    """Read-only physical cluster state, implemented by each executor."""
+
+    spec: ClusterSpec
+
+    def free_slots(self, phase: Phase) -> list[SlotKey]: ...
+    def slot_occupant(self, slot: SlotKey) -> TaskAttempt | None: ...
+    def occupied_slots(self, phase: Phase) -> dict[SlotKey, TaskAttempt]: ...
+    def machine_suspended_count(self, machine: int) -> int: ...
+    def machine_suspended_bytes(self, machine: int) -> int: ...
+    def total_suspended_bytes(self) -> int: ...
+
+
+@dataclass
+class Action:
+    pass
+
+
+@dataclass
+class Start(Action):
+    attempt: TaskAttempt
+    slot: SlotKey
+    local: bool = True
+
+
+@dataclass
+class Resume(Action):
+    attempt: TaskAttempt
+    slot: SlotKey
+
+
+@dataclass
+class Suspend(Action):
+    attempt: TaskAttempt
+
+
+@dataclass
+class Kill(Action):
+    attempt: TaskAttempt
+
+
+# ---------------------------------------------------------------------------
+# Base scheduler
+# ---------------------------------------------------------------------------
+@dataclass
+class SchedulerConfig:
+    # Delay scheduling (Sect. 3.1 "Data locality"): how many scheduling
+    # opportunities a job may skip waiting for a data-local MAP slot.
+    locality_max_skips: int = 3
+    locality_enabled: bool = True
+
+
+class Scheduler(abc.ABC):
+    """Common machinery: job registry, locality-aware slot matching."""
+
+    name = "base"
+
+    def __init__(self, cluster: ClusterSpec, config: SchedulerConfig | None = None):
+        self.cluster = cluster
+        self.config = config or SchedulerConfig()
+        self.jobs: dict[int, JobState] = {}
+        self.stats = SchedulerStats()
+        self._skip_counts: dict[int, int] = {}
+        self._skip_marked: dict[int, int] = {}  # job -> pass seq of last skip
+        self._pass_seq = 0
+        # Live-job index (jobs with completion_time None), kept incrementally.
+        self._live: dict[int, JobState] = {}
+        # Tasks already given an action in the *current* pass (the executor
+        # has not applied the actions yet, so JobState still shows them as
+        # PENDING/SUSPENDED — helpers must not hand them out twice).
+        self._claimed: set[tuple] = set()
+
+    def _begin_pass(self) -> None:
+        self._claimed.clear()
+        self._pass_seq += 1
+
+    # -- events (executor -> scheduler) -------------------------------------
+    def on_job_arrival(self, spec: JobSpec, now: float) -> JobState:
+        js = JobState(spec=spec)
+        self.jobs[spec.job_id] = js
+        self._live[spec.job_id] = js
+        return js
+
+    def on_task_complete(self, job_id: int, key: tuple, now: float) -> None:
+        pass
+
+    def on_task_progress(
+        self, job_id: int, key: tuple, fraction: float, elapsed: float, now: float
+    ) -> None:
+        pass
+
+    def on_job_complete(self, job_id: int, now: float) -> None:
+        self._live.pop(job_id, None)
+
+    def on_tick(self, now: float) -> None:
+        """Periodic heartbeat (executors call this every few sim-seconds)."""
+
+    # -- decisions -----------------------------------------------------------
+    @abc.abstractmethod
+    def schedule(self, view: ClusterView, now: float) -> list[Action]:
+        """Return the actions to apply given current physical state."""
+
+    # -- shared helpers --------------------------------------------------------
+    def live_jobs(self, phase: Phase) -> list[JobState]:
+        out = []
+        for js in self._live.values():
+            if phase is Phase.REDUCE and not js.reduce_unlocked():
+                continue
+            if js.n_unfinished(phase):
+                out.append(js)
+        return out
+
+    def _demand(self, js: JobState, phase: Phase) -> int:
+        """Slots the job could use *right now* in this phase."""
+        return js.n_pending(phase) + js.n_suspended(phase) + js.n_running(phase)
+
+    def _unclaimed_pending(self, js: JobState, phase: Phase) -> int:
+        """Pending tasks not yet claimed this pass (exact when the claimed
+        set is small, which it is — it only holds this pass's actions)."""
+        n = js.n_pending(phase)
+        if not self._claimed:
+            return n
+        jid = js.spec.job_id
+        claimed_here = sum(
+            1
+            for k in self._claimed
+            if k[0] == jid
+            and k[1] == phase.value
+            and js.tasks[k].state is TaskState.PENDING
+        )
+        return n - claimed_here
+
+    # .. locality-aware assignment of pending tasks to free slots ...........
+    def _assign_pending(
+        self,
+        js: JobState,
+        phase: Phase,
+        free: list[SlotKey],
+        budget: int,
+        now: float,
+        only_keys: Iterable[tuple] | None = None,
+    ) -> tuple[list[Action], list[SlotKey]]:
+        """Assign up to ``budget`` pending tasks of ``js`` to ``free`` slots.
+
+        MAP tasks use delay scheduling: prefer slots on machines that hold
+        the task's input; a job may skip ``locality_max_skips`` scheduling
+        opportunities before accepting a non-local slot.  Returns the
+        actions plus the still-free slots.  ``only_keys`` restricts the
+        candidate tasks (used by the HFSP Training module to dispatch just
+        the sample set).
+        """
+        actions: list[Action] = []
+        if budget <= 0 or not free:
+            return actions, free
+        jid = js.spec.job_id
+        restrict: set[tuple] | None = set(only_keys) if only_keys is not None else None
+
+        def eligible(att: TaskAttempt) -> bool:
+            k = att.spec.key
+            if att.state is not TaskState.PENDING or k in self._claimed:
+                return False
+            return restrict is None or k in restrict
+
+        if phase is Phase.MAP and self.config.locality_enabled:
+            rest_slots: list[SlotKey] = []
+            for slot in free:
+                if budget <= 0:
+                    rest_slots.append(slot)
+                    continue
+                att = next(
+                    (a for a in js.local_pending(slot.machine) if eligible(a)),
+                    None,
+                )
+                if att is not None:
+                    self._claimed.add(att.spec.key)
+                    actions.append(Start(att, slot, local=True))
+                    js.locality_hits += 1
+                    budget -= 1
+                    self._skip_counts[jid] = 0
+                else:
+                    rest_slots.append(slot)
+            free = rest_slots
+            if budget > 0 and free:
+                remaining = [a for a in js.iter_pending(phase) if eligible(a)]
+                # Tasks with no locality information cannot benefit from
+                # waiting — assign them immediately (ML step quanta, or
+                # jobs whose replicas are all dead).
+                free = list(free)
+                for att in [a for a in remaining if not a.spec.input_hosts]:
+                    if budget <= 0 or not free:
+                        break
+                    slot = free.pop(0)
+                    self._claimed.add(att.spec.key)
+                    actions.append(Start(att, slot, local=True))
+                    budget -= 1
+                remaining = [a for a in remaining if a.spec.input_hosts]
+                if remaining and budget > 0 and free:
+                    skips = self._skip_counts.get(jid, 0)
+                    if skips < self.config.locality_max_skips:
+                        # Delay: skip this opportunity hoping for a local
+                        # slot.  Counted at most once per scheduling pass
+                        # (the Training module and the job scheduler may
+                        # both consider the same job in one pass).
+                        if self._skip_marked.get(jid) != self._pass_seq:
+                            self._skip_counts[jid] = skips + 1
+                            self._skip_marked[jid] = self._pass_seq
+                            self.stats.delay_sched_waits += 1
+                    else:
+                        while remaining and budget > 0 and free:
+                            att = remaining.pop(0)
+                            slot = free.pop(0)
+                            self._claimed.add(att.spec.key)
+                            actions.append(Start(att, slot, local=False))
+                            js.locality_misses += 1
+                            budget -= 1
+                        self._skip_counts[jid] = 0
+        else:
+            # REDUCE tasks (or locality disabled): any slot will do.
+            free = list(free)
+            for att in js.iter_pending(phase):
+                if budget <= 0 or not free:
+                    break
+                if not eligible(att):
+                    continue
+                slot = free.pop(0)
+                self._claimed.add(att.spec.key)
+                actions.append(Start(att, slot, local=True))
+                budget -= 1
+        return actions, free
+
+    def _resume_suspended(
+        self,
+        js: JobState,
+        phase: Phase,
+        free: list[SlotKey],
+        budget: int,
+    ) -> tuple[list[Action], list[SlotKey]]:
+        """Resume suspended tasks on their *own* machines (Sect. 3.3 —
+        suspended state is materialized locally and must resume in place)."""
+        actions: list[Action] = []
+        if budget <= 0:
+            return actions, free
+        free_by_machine: dict[int, list[SlotKey]] = {}
+        for s in free:
+            free_by_machine.setdefault(s.machine, []).append(s)
+        for att in js.suspended(phase):
+            if budget <= 0:
+                break
+            if att.spec.key in self._claimed:
+                continue
+            slots = free_by_machine.get(att.machine if att.machine is not None else -1)
+            if slots:
+                slot = slots.pop(0)
+                self._claimed.add(att.spec.key)
+                actions.append(Resume(att, slot))
+                budget -= 1
+        used = {a.slot for a in actions if isinstance(a, Resume)}
+        return actions, [s for s in free if s not in used]
+
+
+def job_sort_key_fifo(js: JobState) -> tuple:
+    return (-js.spec.weight, js.spec.arrival_time, js.spec.job_id)

@@ -1,0 +1,347 @@
+"""Discrete-event cluster simulator — the paper's Mumak analogue (Sect. 4.1).
+
+Executes any :class:`~repro.core.scheduler.Scheduler` against a simulated
+cluster with per-machine MAP/REDUCE slots, data locality, preemption
+primitives (SUSPEND / RESUME / KILL) and an optional DMA cost model for the
+TPU adaptation (suspend state must cross HBM<->host DRAM; in the paper the
+analogous cost is OS swap I/O, which Sect. 5 argues is bounded).
+
+Semantics:
+
+* a RUNNING task progresses at unit rate; progress is frozen on SUSPEND;
+* RESUME charges ``ClusterSpec.suspend_cost(state_bytes)`` by *rolling back*
+  progress (the swapped-in context must be re-materialized before useful
+  work continues — the paper's "Resume operation may introduce further
+  delays");
+* KILL discards all progress and re-queues the task (Sect. 3.3);
+* REDUCE sample tasks report progress to the scheduler after ``delta``
+  seconds of execution (supports the sigma = Delta/p estimator, Sect. 3.2.1);
+* the scheduler is consulted on every event and on a periodic heartbeat.
+
+The simulator is deterministic given the job list.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+
+from repro.core.scheduler import Action, Kill, Resume, Scheduler, Start, Suspend
+from repro.core.types import (
+    Assignment,
+    ClusterSpec,
+    JobSpec,
+    JobState,
+    Phase,
+    SlotKey,
+    TaskAttempt,
+    TaskState,
+)
+
+_ARRIVAL, _COMPLETE, _PROGRESS, _TICK = 0, 1, 2, 3
+
+
+@dataclass
+class SimResult:
+    """Everything the benchmarks need."""
+
+    arrival: dict[int, float] = field(default_factory=dict)
+    completion: dict[int, float] = field(default_factory=dict)
+    first_dispatch: dict[int, float] = field(default_factory=dict)
+    locality_hits: int = 0
+    locality_misses: int = 0
+    stats: object | None = None
+    # (time, job_id, phase, running-slot-count) samples for Fig. 7 graphs.
+    timeline: list[tuple[float, int, str, int]] = field(default_factory=list)
+    makespan: float = 0.0
+
+    @property
+    def sojourn(self) -> dict[int, float]:
+        return {
+            j: self.completion[j] - self.arrival[j]
+            for j in self.completion
+            if j in self.arrival
+        }
+
+    def mean_sojourn(self) -> float:
+        s = self.sojourn
+        return sum(s.values()) / len(s) if s else 0.0
+
+    @property
+    def locality_fraction(self) -> float:
+        tot = self.locality_hits + self.locality_misses
+        return self.locality_hits / tot if tot else 1.0
+
+
+class Simulator:
+    """ClusterView implementation + event loop."""
+
+    def __init__(
+        self,
+        cluster: ClusterSpec,
+        scheduler: Scheduler,
+        jobs: list[JobSpec],
+        heartbeat: float = 3.0,
+        track_timeline: bool = False,
+        progress_delta: float | None = None,
+    ):
+        self.spec = cluster
+        self.scheduler = scheduler
+        self.heartbeat = heartbeat
+        self.track_timeline = track_timeline
+        # Delta after which a running REDUCE sample task reports progress;
+        # defaults to the scheduler's TrainingModule delta if present.
+        if progress_delta is None:
+            progress_delta = getattr(
+                getattr(scheduler, "training", None), "delta", 60.0
+            )
+        self.progress_delta = progress_delta
+
+        self._jobs = sorted(jobs, key=lambda j: (j.arrival_time, j.job_id))
+        self._heap: list[tuple[float, int, int, object]] = []
+        self._seq = itertools.count()
+        self._now = 0.0
+        # Physical slot state.
+        self._free: dict[Phase, list[SlotKey]] = {Phase.MAP: [], Phase.REDUCE: []}
+        for m in range(cluster.num_machines):
+            for i in range(cluster.map_slots_per_machine):
+                self._free[Phase.MAP].append(SlotKey(m, Phase.MAP, i))
+            for i in range(cluster.reduce_slots_per_machine):
+                self._free[Phase.REDUCE].append(SlotKey(m, Phase.REDUCE, i))
+        self._occupied: dict[SlotKey, TaskAttempt] = {}
+        self._occupied_by_phase: dict[Phase, dict[SlotKey, TaskAttempt]] = {
+            Phase.MAP: {}, Phase.REDUCE: {},
+        }
+        self._slot_by_task: dict[tuple, SlotKey] = {}
+        # Epochs invalidate stale COMPLETE/PROGRESS events after preemption.
+        self._epoch: dict[tuple, int] = {}
+        self._susp_bytes: dict[int, int] = {}
+        self._susp_count: dict[int, int] = {}
+        self._susp_total = 0
+        self._tick_pending = False
+        self.result = SimResult()
+
+    # ------------------------------------------------------------------
+    # ClusterView protocol
+    # ------------------------------------------------------------------
+    def free_slots(self, phase: Phase) -> list[SlotKey]:
+        return list(self._free[phase])
+
+    def slot_occupant(self, slot: SlotKey) -> TaskAttempt | None:
+        return self._occupied.get(slot)
+
+    def occupied_slots(self, phase: Phase) -> dict[SlotKey, TaskAttempt]:
+        # Returned dict is live state — schedulers must treat it read-only.
+        return self._occupied_by_phase[phase]
+
+    def machine_suspended_count(self, machine: int) -> int:
+        return self._susp_count.get(machine, 0)
+
+    def machine_suspended_bytes(self, machine: int) -> int:
+        return self._susp_bytes.get(machine, 0)
+
+    def total_suspended_bytes(self) -> int:
+        return self._susp_total
+
+    # ------------------------------------------------------------------
+    # Event helpers
+    # ------------------------------------------------------------------
+    def _push(self, t: float, kind: int, payload: object) -> None:
+        heapq.heappush(self._heap, (t, kind, next(self._seq), payload))
+
+    def _bump(self, key: tuple) -> int:
+        self._epoch[key] = self._epoch.get(key, 0) + 1
+        return self._epoch[key]
+
+    def _job_state(self, job_id: int) -> JobState:
+        return self.scheduler.jobs[job_id]
+
+    # ------------------------------------------------------------------
+    # Action application
+    # ------------------------------------------------------------------
+    def _apply(self, action: Action) -> None:
+        now = self._now
+        if isinstance(action, Start):
+            att, slot = action.attempt, action.slot
+            assert att.state is TaskState.PENDING, (att.spec.key, att.state)
+            assert slot in self._free[slot.phase], slot
+            self._free[slot.phase].remove(slot)
+            js = self._job_state(att.spec.job_id)
+            js.transition(att, TaskState.RUNNING)
+            att.machine = slot.machine
+            att.started_at = now
+            att.attempts += 1
+            self._occupied[slot] = att
+            self._occupied_by_phase[slot.phase][slot] = att
+            self._slot_by_task[att.spec.key] = slot
+            if js.first_dispatch_time is None:
+                js.first_dispatch_time = now
+                self.result.first_dispatch[att.spec.job_id] = now
+            ep = self._bump(att.spec.key)
+            self._push(now + att.remaining, _COMPLETE, (att, ep))
+            if (
+                att.spec.phase is Phase.REDUCE
+                and att.remaining > self.progress_delta
+            ):
+                self._push(now + self.progress_delta, _PROGRESS, (att, ep))
+        elif isinstance(action, Resume):
+            att, slot = action.attempt, action.slot
+            assert att.state is TaskState.SUSPENDED, (att.spec.key, att.state)
+            assert att.machine == slot.machine, "resume must be local (Sect 3.3)"
+            assert slot in self._free[slot.phase], slot
+            self._free[slot.phase].remove(slot)
+            # Swap-in cost: roll back progress by the DMA latency.
+            cost = self.spec.suspend_cost(att.spec.state_bytes)
+            att.progress = max(0.0, att.progress - cost)
+            self._job_state(att.spec.job_id).transition(att, TaskState.RUNNING)
+            att.started_at = now
+            att.attempts += 1
+            self._occupied[slot] = att
+            self._occupied_by_phase[slot.phase][slot] = att
+            self._slot_by_task[att.spec.key] = slot
+            self._susp_bytes[slot.machine] = self._susp_bytes.get(
+                slot.machine, 0
+            ) - att.spec.state_bytes
+            self._susp_count[slot.machine] = (
+                self._susp_count.get(slot.machine, 0) - 1
+            )
+            self._susp_total -= att.spec.state_bytes
+            ep = self._bump(att.spec.key)
+            self._push(now + att.remaining, _COMPLETE, (att, ep))
+        elif isinstance(action, Suspend):
+            att = action.attempt
+            assert att.state is TaskState.RUNNING, (att.spec.key, att.state)
+            slot = self._slot_by_task.pop(att.spec.key)
+            del self._occupied[slot]
+            del self._occupied_by_phase[slot.phase][slot]
+            self._free[slot.phase].append(slot)
+            att.progress = min(
+                att.spec.duration, att.progress + (now - att.started_at)
+            )
+            self._job_state(att.spec.job_id).transition(att, TaskState.SUSPENDED)
+            att.suspended_at = now
+            self._bump(att.spec.key)
+            m = att.machine if att.machine is not None else -1
+            self._susp_bytes[m] = self._susp_bytes.get(m, 0) + att.spec.state_bytes
+            self._susp_count[m] = self._susp_count.get(m, 0) + 1
+            self._susp_total += att.spec.state_bytes
+        elif isinstance(action, Kill):
+            att = action.attempt
+            assert att.state is TaskState.RUNNING, (att.spec.key, att.state)
+            slot = self._slot_by_task.pop(att.spec.key)
+            del self._occupied[slot]
+            del self._occupied_by_phase[slot.phase][slot]
+            self._free[slot.phase].append(slot)
+            att.progress = 0.0
+            self._job_state(att.spec.job_id).transition(att, TaskState.PENDING)
+            att.machine = None
+            att.started_at = None
+            self._bump(att.spec.key)
+        else:  # pragma: no cover - defensive
+            raise TypeError(f"unknown action {action!r}")
+
+    # ------------------------------------------------------------------
+    # Event processing
+    # ------------------------------------------------------------------
+    def _on_arrival(self, spec: JobSpec) -> None:
+        self.result.arrival[spec.job_id] = self._now
+        self.scheduler.on_job_arrival(spec, self._now)
+        # Jobs with no tasks at all complete immediately.
+        js = self._job_state(spec.job_id)
+        if js.is_done():
+            self._complete_job(js)
+
+    def _on_complete(self, att: TaskAttempt, epoch: int) -> None:
+        if self._epoch.get(att.spec.key) != epoch:
+            return  # stale (task was suspended/killed since)
+        if att.state is not TaskState.RUNNING:
+            return
+        slot = self._slot_by_task.pop(att.spec.key)
+        del self._occupied[slot]
+        del self._occupied_by_phase[slot.phase][slot]
+        self._free[slot.phase].append(slot)
+        att.progress = att.spec.duration
+        self._job_state(att.spec.job_id).transition(att, TaskState.DONE)
+        self._bump(att.spec.key)
+        self.scheduler.on_task_complete(att.spec.job_id, att.spec.key, self._now)
+        js = self._job_state(att.spec.job_id)
+        if js.is_done() and js.completion_time is None:
+            self._complete_job(js)
+
+    def _on_progress(self, att: TaskAttempt, epoch: int) -> None:
+        if self._epoch.get(att.spec.key) != epoch:
+            return
+        if att.state is not TaskState.RUNNING:
+            return
+        elapsed = self._now - att.started_at
+        # Fraction of this task's input processed so far (unit rate).
+        worked = att.progress + elapsed
+        fraction = min(1.0, worked / att.spec.duration)
+        self.scheduler.on_task_progress(
+            att.spec.job_id, att.spec.key, fraction, elapsed, self._now
+        )
+
+    def _complete_job(self, js: JobState) -> None:
+        js.completion_time = self._now
+        self.result.completion[js.spec.job_id] = self._now
+        self.result.locality_hits += js.locality_hits
+        self.result.locality_misses += js.locality_misses
+        self.scheduler.on_job_complete(js.spec.job_id, self._now)
+
+    def _live_jobs_exist(self) -> bool:
+        return bool(self.scheduler._live)
+
+    def _sample_timeline(self) -> None:
+        if not self.track_timeline:
+            return
+        counts: dict[tuple[int, Phase], int] = {}
+        for att in self._occupied.values():
+            k = (att.spec.job_id, att.spec.phase)
+            counts[k] = counts.get(k, 0) + 1
+        for (jid, phase), n in sorted(counts.items()):
+            self.result.timeline.append((self._now, jid, phase.value, n))
+
+    # ------------------------------------------------------------------
+    def run(self, until: float = math.inf, max_events: int | None = None) -> SimResult:
+        """Run (or incrementally continue) the simulation up to ``until``."""
+        if not getattr(self, "_arrivals_seeded", False):
+            self._arrivals_seeded = True
+            for spec in self._jobs:
+                self._push(spec.arrival_time, _ARRIVAL, spec)
+        n_events = 0
+        while self._heap:
+            n_events += 1
+            if max_events is not None and n_events > max_events:
+                raise RuntimeError(
+                    f"simulator exceeded {max_events} events at t={self._now}"
+                    " — scheduler livelock?"
+                )
+            if self._heap[0][0] > until:
+                break
+            t, kind, _, payload = heapq.heappop(self._heap)
+            self._now = max(self._now, t)
+            if kind == _ARRIVAL:
+                self._on_arrival(payload)
+            elif kind == _COMPLETE:
+                self._on_complete(*payload)
+            elif kind == _PROGRESS:
+                self._on_progress(*payload)
+            elif kind == _TICK:
+                self._tick_pending = False
+                self.scheduler.on_tick(self._now)
+            # Coalesce same-timestamp events before scheduling a pass.
+            if self._heap and self._heap[0][0] <= self._now:
+                nxt_kind = self._heap[0][1]
+                if nxt_kind in (_ARRIVAL, _COMPLETE):
+                    continue
+            for action in self.scheduler.schedule(self, self._now):
+                self._apply(action)
+            self._sample_timeline()
+            if self._live_jobs_exist() and not self._tick_pending:
+                self._push(self._now + self.heartbeat, _TICK, None)
+                self._tick_pending = True
+        self.result.stats = self.scheduler.stats
+        self.result.makespan = self._now
+        return self.result

@@ -1,0 +1,298 @@
+"""The virtual cluster (Sect. 3.1).
+
+HFSP ranks jobs by the time at which they *would* finish if the cluster were
+running a max-min-fair processor-sharing (PS) discipline.  The virtual
+cluster simulates exactly that: it mirrors the real cluster's slot counts,
+allocates virtual slots to jobs with max-min fairness (round-robin, starting
+from the smallest jobs), and *ages* jobs between scheduler events by
+subtracting `dt x allocated_slots` from their serialized remaining work.
+
+Job size is serialized (sum of task runtimes on one slot), so aging is
+independent of the real cluster's state — the paper's trick for tolerating
+failures and elastic width (DESIGN.md §2, §7).
+
+One VirtualCluster instance exists per phase (MAP and REDUCE are scheduled
+independently, Sect. 3.1).
+
+Performance notes (the scheduler runs on every executor event):
+
+* the discrete max-min allocation depends only on (caps, weights, slots) —
+  NOT on remaining work — so it is recomputed lazily, only after
+  membership/cap changes;
+* the projected-finish ORDER is invariant under aging (in continuous PS all
+  jobs age exactly at their allocated rate, so absolute projected finish
+  times are constant between structural events); the order is therefore
+  cached and recomputed only on job add/remove and size re-estimates.
+  Cap changes (task completions) can only *accelerate* the affected job's
+  PS finish; we accept the momentarily stale order until the next
+  structural event, which in practice arrives within one heartbeat.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.types import Phase
+
+
+@dataclass
+class _VJob:
+    job_id: int
+    remaining: float          # serialized seconds (estimated)
+    cap: int                  # parallelism at arrival = task count
+    weight: float = 1.0       # GPS weight (Sect. 5)
+    size_rank: int = 0        # number of tasks at arrival; round-robin order
+    done: float = 0.0         # virtual work already aged away (for estimate updates)
+    task_time: float = 1.0    # estimated serialized seconds per task
+
+    def effective_cap(self) -> int:
+        """Virtual parallelism: the number of *virtual* tasks still
+        unfinished.  The virtual cluster is a pure PS simulation — its
+        parallelism shrinks as virtual work depletes (the job's "tail"),
+        NOT as real tasks complete.  Coupling it to real completions makes
+        a focused job's projected PS finish time rise while it runs, which
+        flips the schedule order and causes preemption thrash."""
+        if math.isinf(self.remaining):
+            return self.cap
+        if self.task_time <= 0:
+            return self.cap
+        return max(1, min(self.cap, int(math.ceil(self.remaining / self.task_time - 1e-9))))
+
+
+def max_min_allocation(
+    demands: dict[int, tuple[float, float]], slots: float
+) -> dict[int, float]:
+    """Weighted max-min fair (water-filling) allocation.
+
+    ``demands`` maps job_id -> (cap, weight).  Returns continuous slot
+    shares summing to at most ``slots`` (less if total cap is smaller).
+    """
+    ids = list(demands)
+    caps = np.array([demands[j][0] for j in ids], dtype=np.float64)
+    ws = np.array([demands[j][1] for j in ids], dtype=np.float64)
+    alloc = _water_fill(caps, ws, float(slots))
+    return {j: float(a) for j, a in zip(ids, alloc)}
+
+
+def _water_fill(caps: np.ndarray, ws: np.ndarray, slots: float) -> np.ndarray:
+    """Vectorized weighted water-filling: fill proportionally to weight,
+    clamp at cap, redistribute, repeat.  O(#cap-levels) rounds."""
+    n = len(caps)
+    alloc = np.zeros(n)
+    active = caps > 0
+    free = float(slots)
+    while free > 1e-12 and active.any():
+        total_w = ws[active].sum()
+        if total_w <= 0:
+            break
+        share = np.zeros(n)
+        share[active] = free * ws[active] / total_w
+        headroom = caps - alloc
+        capped = active & (share >= headroom - 1e-12)
+        if not capped.any():
+            alloc[active] += share[active]
+            break
+        grant = np.where(capped, headroom, 0.0)
+        alloc += grant
+        free -= float(grant.sum())
+        active &= ~capped
+    return alloc
+
+
+def discrete_allocation(
+    demands: dict[int, tuple[float, float]],
+    slots: int,
+    size_rank: dict[int, int],
+) -> dict[int, int]:
+    """Integer max-min allocation via round-robin, small jobs first.
+
+    "Max-min fairness is achieved using a round-robin mechanism that starts
+    allocating virtual cluster resources to small jobs (in terms of their
+    number of tasks)." (Sect. 3.1)
+
+    Implemented as floor(water-fill) + leftover slots granted one-by-one in
+    small-job-first order among jobs with headroom — equivalent to the
+    round-robin description but O(J log J).
+    """
+    ids = sorted(demands, key=lambda j: (size_rank.get(j, 0), j))
+    caps = np.array([demands[j][0] for j in ids], dtype=np.float64)
+    ws = np.array([demands[j][1] for j in ids], dtype=np.float64)
+    cont = _water_fill(caps, ws, float(slots))
+    base = np.minimum(np.floor(cont + 1e-9), caps).astype(np.int64)
+    free = int(slots) - int(base.sum())
+    if free > 0:
+        # Leftovers: small-first round-robin over jobs with headroom.
+        headroom = (caps - base).astype(np.int64)
+        while free > 0 and (headroom > 0).any():
+            for i in range(len(ids)):
+                if free <= 0:
+                    break
+                if headroom[i] > 0:
+                    base[i] += 1
+                    headroom[i] -= 1
+                    free -= 1
+    return {j: int(b) for j, b in zip(ids, base)}
+
+
+def project_finish_times(
+    jobs: dict[int, tuple[float, float, float]], slots: float, now: float
+) -> dict[int, float]:
+    """Forward-simulate weighted max-min PS; return absolute finish times.
+
+    ``jobs`` maps job_id -> (remaining_serialized, cap, weight).  Piecewise
+    constant allocations: at each step the job with the minimal
+    remaining/allocation finishes, its slots are redistributed, repeat.
+    Jobs with infinite remaining (xi = inf initial estimates, Sect. 3.1.1)
+    get finish time +inf and therefore sort last.
+    """
+    ids = list(jobs)
+    rem = np.array([jobs[j][0] for j in ids], dtype=np.float64)
+    caps = np.array([jobs[j][1] for j in ids], dtype=np.float64)
+    ws = np.array([jobs[j][2] for j in ids], dtype=np.float64)
+    fin = np.full(len(ids), np.inf)
+    live = (rem > 0) & (caps > 0)
+    fin[~live] = now
+    t = now
+    while live.any():
+        alloc = np.zeros(len(ids))
+        alloc[live] = _water_fill(caps[live], ws[live], float(slots))
+        with np.errstate(divide="ignore", invalid="ignore"):
+            dt = np.where(live & (alloc > 0), rem / np.maximum(alloc, 1e-300), np.inf)
+        dt_min = dt.min()
+        if not np.isfinite(dt_min):
+            break  # only infinite-size jobs left -> they never finish in PS
+        t += float(dt_min)
+        rem = np.where(live, np.maximum(rem - alloc * dt_min, 0.0), rem)
+        done = live & (dt <= dt_min + 1e-12)
+        fin[done] = t
+        live &= ~done
+    return {j: float(f) for j, f in zip(ids, fin)}
+
+
+@dataclass
+class VirtualCluster:
+    """Mirror of the real cluster for one phase (Sect. 3.1)."""
+
+    phase: Phase
+    slots: int
+    jobs: dict[int, _VJob] = field(default_factory=dict)
+    _alloc_cache: dict | None = field(default=None, repr=False)
+    _order_cache: list | None = field(default=None, repr=False)
+
+    # -- cache control --------------------------------------------------------
+    def _invalidate_alloc(self) -> None:
+        self._alloc_cache = None
+
+    def _invalidate_order(self) -> None:
+        self._order_cache = None
+
+    # -- membership ---------------------------------------------------------
+    def add_job(
+        self,
+        job_id: int,
+        est_size: float,
+        num_tasks: int,
+        weight: float = 1.0,
+    ) -> None:
+        tt = est_size / num_tasks if (num_tasks and math.isfinite(est_size)) else 1.0
+        self.jobs[job_id] = _VJob(
+            job_id=job_id,
+            remaining=est_size,
+            cap=num_tasks,
+            weight=weight,
+            size_rank=num_tasks,
+            task_time=max(tt, 1e-9),
+        )
+        self._invalidate_alloc()
+        self._invalidate_order()
+
+    def remove_job(self, job_id: int) -> None:
+        if self.jobs.pop(job_id, None) is not None:
+            self._invalidate_alloc()
+            self._invalidate_order()
+
+    def __contains__(self, job_id: int) -> bool:
+        return job_id in self.jobs
+
+    # -- estimate updates (Training module, Sect. 3.2) ----------------------
+    def set_remaining(self, job_id: int, remaining: float) -> None:
+        if job_id in self.jobs:
+            self.jobs[job_id].remaining = remaining
+            self._invalidate_order()
+
+    def set_size(self, job_id: int, size: float) -> None:
+        """Re-estimate total size: 'the job scheduler *updates* the remaining
+        amount of work to be done for the job' (Sect. 3.1.1) — the virtual
+        work already done is preserved."""
+        if job_id in self.jobs:
+            v = self.jobs[job_id]
+            v.remaining = max(0.0, size - v.done)
+            if v.cap and math.isfinite(size):
+                v.task_time = max(size / v.cap, 1e-9)
+            self._invalidate_alloc()
+            self._invalidate_order()
+
+    def set_cap(self, job_id: int, cap: int) -> None:
+        if job_id in self.jobs and self.jobs[job_id].cap != cap:
+            self.jobs[job_id].cap = cap
+            self._invalidate_alloc()
+            # Order kept: a cap drop only accelerates this job's PS finish
+            # (see module docstring); next structural event refreshes it.
+
+    def remaining(self, job_id: int) -> float:
+        return self.jobs[job_id].remaining if job_id in self.jobs else 0.0
+
+    # -- aging (Sect. 3.1, "Job aging") --------------------------------------
+    def age(self, dt: float) -> None:
+        """Distribute ``dt`` of progress to every allocated virtual task."""
+        if dt <= 0 or not self.jobs:
+            return
+        alloc = self.allocation()
+        cap_changed = False
+        for j, vjob in self.jobs.items():
+            a = alloc.get(j, 0)
+            if a > 0:
+                before = vjob.effective_cap()
+                vjob.done += a * dt
+                if not math.isinf(vjob.remaining):
+                    vjob.remaining = max(0.0, vjob.remaining - a * dt)
+                if vjob.effective_cap() != before:
+                    cap_changed = True
+        if cap_changed:
+            # A virtual tail shrank below its allocation: redistribute.
+            self._invalidate_alloc()
+        # Aging preserves the projected finish ORDER (continuous-PS
+        # invariance): the order cache stays valid.
+
+    # -- queries --------------------------------------------------------------
+    def allocation(self) -> dict[int, int]:
+        if self._alloc_cache is None:
+            demands = {
+                j: (v.effective_cap(), v.weight) for j, v in self.jobs.items()
+            }
+            rank = {j: v.size_rank for j, v in self.jobs.items()}
+            self._alloc_cache = discrete_allocation(demands, self.slots, rank)
+        return self._alloc_cache
+
+    def projected_finish(self, now: float) -> dict[int, float]:
+        """Absolute PS finish time per job — HFSP's sort key (Sect. 3.1)."""
+        return project_finish_times(
+            {
+                j: (v.remaining, v.effective_cap(), v.weight)
+                for j, v in self.jobs.items()
+            },
+            self.slots,
+            now,
+        )
+
+    def schedule_order(self, now: float) -> list[int]:
+        """Job ids sorted by projected finish time, ties by id (FIFO-ish)."""
+        if self._order_cache is None:
+            fin = self.projected_finish(now)
+            self._order_cache = sorted(
+                fin, key=lambda j: (fin[j], self.jobs[j].size_rank, j)
+            )
+        return self._order_cache

@@ -1,0 +1,45 @@
+"""Jitted wrapper: model-layout adapter + kernel/ref dispatch.
+
+``flash_attention`` takes the model layout (b, s, h, hd) used everywhere in
+:mod:`repro.models` and handles transposition, GQA, scale, and the
+interpret-mode fallback used for CPU validation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(
+    q: jnp.ndarray,   # (b, sq, h, hd)
+    k: jnp.ndarray,   # (b, skv, kvh, hd)
+    v: jnp.ndarray,
+    *,
+    mask=None,        # accepted for API parity; kernel derives its own mask
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    out = flash_attention_bhsd(
+        qt, kt, vt,
+        scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+    return jnp.transpose(out, (0, 2, 1, 3))
+
+
+def flash_attention_reference(q, k, v, *, scale, causal=True, window=None, **_):
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    out = attention_ref(qt, kt, vt, scale=scale, causal=causal, window=window)
+    return jnp.transpose(out, (0, 2, 1, 3))

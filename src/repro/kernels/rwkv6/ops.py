@@ -1,0 +1,17 @@
+"""Jitted wrapper for the rwkv6 Pallas kernel in the model's layout."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import rwkv6_chunked_bhtd
+
+
+def rwkv6_chunked(r, k, v, w, u, s0, *, chunk: int = 64, interpret: bool = False):
+    """Model layout (b, t, h, d) -> (out (b,t,h,dv), state (b,h,dk,dv))."""
+    to_bh = lambda x: jnp.moveaxis(x, 1, 2)
+    out, s = rwkv6_chunked_bhtd(
+        to_bh(r), to_bh(k), to_bh(v), to_bh(w), u, s0,
+        chunk=chunk, interpret=interpret,
+    )
+    return jnp.moveaxis(out, 1, 2), s

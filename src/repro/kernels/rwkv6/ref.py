@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the rwkv6 kernel: the sequential scan from
+repro.models.rwkv in the kernel's (b, h, t, d) layout."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.rwkv import rwkv_scan_ref
+
+
+def rwkv6_ref(r, k, v, w, u, s0):
+    """(b,h,t,d) layout -> (out, final_state), fp32."""
+    to_bt = lambda x: jnp.moveaxis(x, 1, 2)   # (b,h,t,d) -> (b,t,h,d)
+    out, s = rwkv_scan_ref(
+        to_bt(r).astype(jnp.float32),
+        to_bt(k).astype(jnp.float32),
+        to_bt(v).astype(jnp.float32),
+        to_bt(w).astype(jnp.float32),
+        u.astype(jnp.float32),
+        s0.astype(jnp.float32),
+    )
+    return jnp.moveaxis(out, 2, 1), s

@@ -1,0 +1,20 @@
+"""Jitted wrapper for the ssd Pallas kernel in the model's layout."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_chunked_bhtp
+
+
+def ssd_chunked(xh, dt, a, B, C, s0, *, chunk: int = 64, interpret: bool = False):
+    """Model layout: xh (b,t,h,p), dt/a (b,t,h), B/C (b,t,n), s0 (b,h,p,n).
+    Returns (y (b,t,h,p), state (b,h,p,n))."""
+    y, s = ssd_chunked_bhtp(
+        jnp.moveaxis(xh, 1, 2),
+        jnp.moveaxis(dt, 1, 2),
+        jnp.moveaxis(a, 1, 2),
+        B, C, s0,
+        chunk=chunk, interpret=interpret,
+    )
+    return jnp.moveaxis(y, 1, 2), s

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the ssd kernel: the sequential scan from
+repro.models.ssd in the kernel's (b, h, t, p) layout."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssd import ssd_scan_ref
+
+
+def ssd_ref(x, dt, a, B, C, s0):
+    """(b,h,t,p) layout -> (y, final_state), fp32."""
+    to_bt = lambda v: jnp.moveaxis(v, 1, 2)   # (b,h,t,*) -> (b,t,h,*)
+    y, s = ssd_scan_ref(
+        to_bt(x).astype(jnp.float32),
+        to_bt(dt).astype(jnp.float32),
+        to_bt(a).astype(jnp.float32),
+        B.astype(jnp.float32),
+        C.astype(jnp.float32),
+        s0.astype(jnp.float32),
+    )
+    return jnp.moveaxis(y, 2, 1), s

@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with ShapeDtypeStruct stand-ins (no allocation), print
+memory_analysis() / cost_analysis(), and emit the roofline terms.
+
+The XLA_FLAGS line above MUST precede every other import — jax locks the
+device count at first init.  This module is the ONLY place that forces 512
+host devices; smoke tests and benchmarks see the real device count.
+
+Per cell, THREE compiles:
+1. full-depth, scan-over-layers  -> proves lowering/compile + memory fit;
+2. depth u,  unrolled            -> cost sample 1   (u = layer-pattern period)
+3. depth 2u, unrolled            -> cost sample 2
+XLA's cost_analysis counts while-loop bodies once, so roofline costs come
+from the unrolled samples, extrapolated linearly in depth (see
+utils/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all --both-meshes --out dryrun.json
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, input_specs, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode_step, init_cache, init_model
+from repro.serve.engine import make_prefill_step
+from repro.sharding.specs import (
+    batch_specs,
+    cache_specs_sharding,
+    param_specs,
+    state_specs,
+    to_named,
+)
+from repro.train import OptimizerConfig, TrainConfig, make_train_step
+from repro.train.step import init_train_state
+from repro.utils.roofline import (
+    extrapolate_depth,
+    measure_compiled,
+    model_flops,
+)
+
+
+def _depth_unit(cfg) -> int:
+    """Smallest depth whose per-layer costs repeat (the layer pattern)."""
+    if cfg.family == "hybrid" and cfg.shared_attn_period:
+        return cfg.shared_attn_period
+    if cfg.local_global_period:
+        return cfg.local_global_period
+    return 1
+
+
+def _at_depth(cfg, depth: int, *, scan: bool, seq_len: int = 4096):
+    kw: dict = {"scan_layers": scan, "unroll_inner": not scan}
+    if not scan and cfg.family in ("ssm", "hybrid"):
+        # Coarser chunks keep the unrolled cost-sample graphs compilable
+        # (<= 16 unrolled chunk blocks per layer); intra-chunk flops are
+        # then an upper bound vs the deployed 64-wide kernel blocks —
+        # noted in EXPERIMENTS.md §Roofline.
+        kw["inner_chunk"] = max(256, seq_len // 16)
+    if cfg.family == "encdec":
+        kw.update(enc_layers=depth, dec_layers=depth, num_layers=2 * depth)
+    else:
+        kw.update(num_layers=depth)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _full_depth(cfg) -> int:
+    return cfg.enc_layers if cfg.family == "encdec" else cfg.num_layers
+
+
+def _dp_size(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+# §Perf hillclimb variants (see EXPERIMENTS.md §Perf):
+#   serve_prefill     — prefill returns last-token logits only
+#   moe_capacity      — shard dispatch-buffer capacity dim; replicate experts
+#   zero_opt          — shard Adam moments' layer dim over data (ZeRO-2-ish)
+VARIANTS: set = set()
+
+
+def _build_jitted(cfg, shape, mesh):
+    """(jitted, abstract_args) for this cell under this mesh."""
+    if cfg.family == "moe":
+        # Group-limited routing: dispatch stays local to each DP shard.
+        dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        cfg = dataclasses.replace(
+            cfg, moe_groups=_dp_size(mesh), moe_group_axis=dp
+        )
+        if "moe_capacity" in VARIANTS:
+            cfg = dataclasses.replace(cfg, moe_capacity_axis="model")
+    specs = input_specs(cfg, shape)
+    bspecs = to_named(mesh, batch_specs(cfg, mesh, shape))
+    if shape.kind == "train":
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(cfg, jax.random.PRNGKey(0))
+        )
+        sspecs = to_named(
+            mesh,
+            state_specs(cfg, mesh, state_shape,
+                        zero_opt="zero_opt" in VARIANTS),
+        )
+        step = make_train_step(cfg, OptimizerConfig(), TrainConfig())
+        jitted = jax.jit(
+            step, in_shardings=(sspecs, bspecs), out_shardings=(sspecs, None)
+        )
+        return jitted, (state_shape, specs)
+    params_shape = jax.eval_shape(lambda: init_model(cfg, jax.random.PRNGKey(0)))
+    pspecs = to_named(mesh, param_specs(cfg, mesh, params_shape))
+    if shape.kind == "prefill":
+        step = make_prefill_step(
+            cfg, last_token_only="serve_prefill" in VARIANTS
+        )
+        jitted = jax.jit(step, in_shardings=(pspecs, bspecs), out_shardings=None)
+        return jitted, (params_shape, specs)
+    # decode
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    cspecs = to_named(mesh, cache_specs_sharding(cfg, mesh, shape, cache_shape))
+    step = lambda p, t, pos, c: decode_step(cfg, p, t, pos, c)
+    jitted = jax.jit(
+        step,
+        in_shardings=(pspecs, bspecs["tokens"], bspecs["positions"], cspecs),
+        out_shardings=(None, cspecs),
+    )
+    return jitted, (params_shape, specs["tokens"], specs["positions"], cache_shape)
+
+
+def _compile(cfg, shape, mesh):
+    jitted, args = _build_jitted(cfg, shape, mesh)
+    with mesh:
+        lowered = jitted.lower(*args)
+        return lowered.compile()
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True, skip_cost: bool = False) -> dict:
+    """Lower + compile one (arch, shape, mesh) cell; return the report."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "SKIP", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    report = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+              "chips": mesh.size}
+
+    # 1) full-depth scan compile: lowering proof + memory analysis.
+    t0 = time.time()
+    compiled = _compile(cfg, shape, mesh)
+    t_full = time.time() - t0
+    mem = compiled.memory_analysis()
+    report.update(
+        status="OK",
+        compile_s=round(t_full, 1),
+        argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+        output_bytes=getattr(mem, "output_size_in_bytes", None),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+    )
+
+    if not skip_cost and "cost_from_scan" in VARIANTS:
+        # Fallback for archs whose unrolled cost samples exceed the CPU
+        # host's compile budget (zamba2): measure the scan compile
+        # directly.  Loop bodies are counted ONCE, so flops/bytes are a
+        # LOWER bound — flagged in the report and §Roofline.
+        roof = measure_compiled(compiled)
+        mflops = model_flops(cfg, shape, backward=(shape.kind == "train"))
+        report.update(
+            cost_method="scan_lower_bound",
+            **roof.summary(),
+            collective_counts=roof.collectives.count_by_op,
+            model_flops=mflops,
+            useful_ratio=None,
+        )
+        if verbose:
+            print(f"  cost (scan LOWER BOUND): flops={roof.flops:.3e} "
+                  f"dominant={roof.dominant}")
+        return report
+
+    if not skip_cost:
+        # 2+3) unrolled cost samples at depths u and 2u -> extrapolate.
+        u = _depth_unit(cfg)
+        t0 = time.time()
+        r1 = measure_compiled(
+            _compile(_at_depth(cfg, u, scan=False, seq_len=shape.seq_len),
+                     shape, mesh)
+        )
+        r2 = measure_compiled(
+            _compile(_at_depth(cfg, 2 * u, scan=False, seq_len=shape.seq_len),
+                     shape, mesh)
+        )
+        roof = extrapolate_depth(r1, r2, u, _full_depth(cfg))
+        t_cost = time.time() - t0
+        mflops = model_flops(cfg, shape, backward=(shape.kind == "train"))
+        hlo_global = roof.flops * mesh.size
+        report.update(
+            cost_compile_s=round(t_cost, 1),
+            **roof.summary(),
+            collective_counts=roof.collectives.count_by_op,
+            collective_bytes_by_op={
+                k: round(v) for k, v in roof.collectives.bytes_by_op.items()
+            },
+            model_flops=mflops,
+            useful_ratio=(mflops / hlo_global) if hlo_global else None,
+        )
+
+    if verbose:
+        print(f"[{arch} x {shape_name} x {'2pod' if multi_pod else '1pod'}] OK "
+              f"compile={report['compile_s']}s", flush=True)
+        print(f"  memory_analysis/device: args={report['argument_bytes']:,} "
+              f"temp={report['temp_bytes']:,} out={report['output_bytes']:,}")
+        if not skip_cost:
+            print(f"  cost_analysis/device (depth-extrapolated): "
+                  f"flops={report['flops']:.3e} bytes={report['bytes']:.3e}")
+            print(f"  collectives: {report['collective_counts']} "
+                  f"wire_bytes={report['coll_bytes']:.3e}")
+            print(f"  roofline: compute={report['compute_s']*1e3:.2f}ms "
+                  f"memory={report['memory_s']*1e3:.2f}ms "
+                  f"collective={report['collective_s']*1e3:.2f}ms "
+                  f"dominant={report['dominant']} "
+                  f"useful={report['useful_ratio']:.3f}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="lowering/memory proof only (multi-pod pass)")
+    ap.add_argument("--variants", default="",
+                    help="comma-separated §Perf variants: "
+                         "serve_prefill,moe_capacity,zero_opt")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    VARIANTS.update(v for v in args.variants.split(",") if v)
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = [(a, s, m) for a in archs for s in shapes for m in meshes]
+
+    reports = []
+    failed = 0
+    for a, s, m in cells:
+        try:
+            reports.append(
+                lower_cell(a, s, multi_pod=m, skip_cost=args.skip_cost)
+            )
+        except Exception as e:  # a failure here is a bug in our sharding
+            failed += 1
+            traceback.print_exc()
+            reports.append({"arch": a, "shape": s, "multi_pod": m,
+                            "status": "FAIL", "error": str(e)[-2000:]})
+        if args.out:  # incremental write: long sweeps survive interruption
+            with open(args.out, "w") as f:
+                json.dump(reports, f, indent=1)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(reports, f, indent=1)
+    n_ok = sum(1 for r in reports if r["status"] == "OK")
+    n_skip = sum(1 for r in reports if r["status"] == "SKIP")
+    print(f"\ndry-run: {n_ok} OK, {n_skip} SKIP, {failed} FAIL "
+          f"of {len(reports)} cells")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

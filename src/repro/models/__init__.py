@@ -1,0 +1,9 @@
+from repro.models.api import (
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    loss_fn,
+)
+
+__all__ = ["decode_step", "forward", "init_cache", "init_model", "loss_fn"]

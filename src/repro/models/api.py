@@ -1,0 +1,78 @@
+"""Public model API: one entry point per model operation, dispatched on
+``cfg.family``.  Everything downstream (train/serve/launch/runtime) goes
+through these four functions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as E
+from repro.models import transformer as T
+from repro.models.common import cross_entropy
+
+
+def init_model(cfg: ModelConfig, key) -> dict:
+    if cfg.family == "encdec":
+        return E.init_encdec(cfg, key)
+    return T.init_lm(cfg, key)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    batch: dict,
+    *,
+    use_flash: bool = False,
+    interpret: bool = False,
+    unembed_last_only: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Train / prefill forward.  Returns (logits, aux_loss)."""
+    if cfg.family == "encdec":
+        return E.encdec_forward(
+            cfg, params, batch, unembed_last_only=unembed_last_only
+        )
+    return T.lm_forward(
+        cfg, params, batch, use_flash=use_flash, interpret=interpret,
+        unembed_last_only=unembed_last_only,
+    )
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: dict,
+    batch: dict,
+    *,
+    use_flash: bool = False,
+    interpret: bool = False,
+    aux_weight: float = 0.01,
+) -> tuple[jnp.ndarray, dict]:
+    logits, aux = forward(
+        cfg, params, batch, use_flash=use_flash, interpret=interpret
+    )
+    labels = batch["labels"]
+    # VLM: logits cover [patches, text]; loss only on the text positions.
+    if cfg.family == "vlm":
+        logits = logits[:, cfg.num_patches :]
+    ce = cross_entropy(logits, labels)
+    total = ce + aux_weight * aux
+    return total, {"loss": total, "ce": ce, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    if cfg.family == "encdec":
+        return E.init_encdec_cache(cfg, batch, max_seq)
+    return T.init_lm_cache(cfg, batch, max_seq)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: dict,
+) -> tuple[jnp.ndarray, dict]:
+    if cfg.family == "encdec":
+        return E.encdec_decode(cfg, params, tokens, positions, cache)
+    return T.lm_decode(cfg, params, tokens, positions, cache)

@@ -1,0 +1,227 @@
+"""Grouped-query attention with every flavour the assigned archs need:
+
+* GQA (kv_heads <= heads), RoPE, optional biases;
+* sliding-window (local) masks and gemma2-style local/global alternation
+  (the per-layer ``is_global`` flag is a *scanned input*, so one scan body
+  serves both layer kinds);
+* attention-logit softcap (gemma2);
+* KV-cache decode (one query token against a ``seq_len`` cache);
+* the compute path is pluggable: ``repro.kernels.flash_attention`` replaces
+  the naive materialized-scores path on TPU.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_rope, dense_init, rope_freqs, softcap
+
+NEG_INF = -2.0**30  # large-but-finite: keeps softmax NaN-free on masked rows
+
+
+def init_attention(cfg: ModelConfig, key, *, layers: int | None = None) -> dict:
+    d, h, kvh, hs = cfg.d_model, cfg.num_heads, cfg.kv_heads, cfg.head_size
+    pref = () if layers is None else (layers,)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, (*pref, d, h, hs), d, cfg.param_dtype),
+        "wk": dense_init(kk, (*pref, d, kvh, hs), d, cfg.param_dtype),
+        "wv": dense_init(kv, (*pref, d, kvh, hs), d, cfg.param_dtype),
+        "wo": dense_init(ko, (*pref, h, hs, d), h * hs, cfg.param_dtype),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((*pref, h, hs), dtype=cfg.param_dtype)
+        p["bk"] = jnp.zeros((*pref, kvh, hs), dtype=cfg.param_dtype)
+        p["bv"] = jnp.zeros((*pref, kvh, hs), dtype=cfg.param_dtype)
+        p["bo"] = jnp.zeros((*pref, d), dtype=cfg.param_dtype)
+    return p
+
+
+def _qkv(cfg: ModelConfig, p: dict, x: jnp.ndarray):
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    return q, k, v
+
+
+def _out(cfg: ModelConfig, p: dict, o: jnp.ndarray) -> jnp.ndarray:
+    dtype = o.dtype
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dtype))
+    if "bo" in p:
+        y = y + p["bo"].astype(dtype)
+    return y
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def causal_mask(
+    q_pos: jnp.ndarray,
+    k_pos: jnp.ndarray,
+    window: int | None,
+    is_global,
+) -> jnp.ndarray:
+    """(q, k) boolean mask.  ``is_global`` may be a traced scalar (scanned
+    layer flag): global layers see full causal context, local layers a
+    sliding window."""
+    causal = k_pos[None, :] <= q_pos[:, None]
+    if window is None:
+        return causal
+    local = causal & (q_pos[:, None] - k_pos[None, :] < window)
+    return jnp.where(is_global, causal, local)
+
+
+def mha(
+    cfg: ModelConfig,
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    use_flash: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Core softmax attention.  q: (b, sq, h, hd), k/v: (b, sk, kvh, hd),
+    mask: (sq, sk) bool (or (b, sq, sk)).
+
+    Long queries are processed in q-chunks of ``cfg.attn_chunk`` — the XLA
+    analogue of the flash kernel's blocking: scores materialize at
+    (b, h, chunk, skv) fp32 instead of (b, h, sq, skv), which is what keeps
+    the 4k-train and 32k-prefill cells inside HBM without Pallas."""
+    groups = q.shape[2] // k.shape[2]
+    scale = cfg.query_scale or (1.0 / math.sqrt(cfg.head_size))
+    if use_flash and cfg.attn_softcap is None and mask.ndim == 2:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        return flash_attention(
+            q, k, v, mask=mask, scale=scale, interpret=interpret
+        )
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    sq = q.shape[1]
+    chunk = cfg.attn_chunk
+    if sq <= chunk or sq % chunk:
+        return _mha_dense(cfg, q, k, v, mask, scale)
+    nq = sq // chunk
+
+    def one_chunk(i: int, q_c: jnp.ndarray) -> jnp.ndarray:
+        if mask.ndim == 2:
+            m_c = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, 0)
+        else:
+            m_c = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, 1)
+        return _mha_dense(cfg, q_c, k, v, m_c, scale)
+
+    if cfg.unroll_inner:
+        outs = [
+            one_chunk(i, q[:, i * chunk : (i + 1) * chunk]) for i in range(nq)
+        ]
+        return jnp.concatenate(outs, axis=1)
+
+    q_chunks = q.reshape(q.shape[0], nq, chunk, *q.shape[2:])
+
+    def body(i, q_c):
+        return i + 1, one_chunk(i, q_c)
+
+    _, outs = jax.lax.scan(body, 0, jnp.moveaxis(q_chunks, 1, 0))
+    return jnp.moveaxis(outs, 0, 1).reshape(q.shape)
+
+
+def _mha_dense(cfg, q, k, v, mask, scale):
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    if mask.ndim == 2:
+        mask_b = mask[None, None, :, :]
+    else:
+        mask_b = mask[:, None, :, :]
+    scores = jnp.where(mask_b, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", probs, v)
+
+
+def attention_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    is_global=True,
+    *,
+    use_flash: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Full self-attention over x (training / prefill path)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(cfg, p, x)
+    cos, sin = rope_freqs(cfg, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    mask = causal_mask(positions[0], positions[0], cfg.sliding_window, is_global)
+    o = mha(cfg, q, k, v, mask, use_flash=use_flash, interpret=interpret)
+    return _out(cfg, p, o)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, *, layers: int
+) -> dict:
+    kvh, hs = cfg.kv_heads, cfg.head_size
+    dt = cfg.activation_dtype()
+    return {
+        "k": jnp.zeros((layers, batch, max_seq, kvh, hs), dtype=dt),
+        "v": jnp.zeros((layers, batch, max_seq, kvh, hs), dtype=dt),
+    }
+
+
+def kv_cache_specs(
+    cfg: ModelConfig, batch: int, max_seq: int, *, layers: int
+) -> dict:
+    kvh, hs = cfg.kv_heads, cfg.head_size
+    dt = cfg.activation_dtype()
+    return {
+        "k": jax.ShapeDtypeStruct((layers, batch, max_seq, kvh, hs), dt),
+        "v": jax.ShapeDtypeStruct((layers, batch, max_seq, kvh, hs), dt),
+    }
+
+
+def decode_attention_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,          # (b, 1, d) — the new token
+    positions: jnp.ndarray,  # (b,) — its position
+    cache_k: jnp.ndarray,    # (b, S, kvh, hd) — this layer's cache
+    cache_v: jnp.ndarray,
+    is_global=True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against the cache; returns (out, new_k, new_v)."""
+    b, _, _ = x.shape
+    S = cache_k.shape[1]
+    q, k, v = _qkv(cfg, p, x)  # (b,1,h,hd) / (b,1,kvh,hd)
+    cos, sin = rope_freqs(cfg, positions[:, None])  # (b,1,hd/2)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    # Insert the new kv at its position.
+    onehot = jax.nn.one_hot(positions, S, dtype=cache_k.dtype)  # (b, S)
+    cache_k = cache_k + onehot[:, :, None, None] * k.astype(cache_k.dtype)
+    cache_v = cache_v + onehot[:, :, None, None] * v.astype(cache_v.dtype)
+    k_pos = jnp.arange(S)
+    valid = k_pos[None, :] <= positions[:, None]  # (b, S)
+    if cfg.sliding_window is not None:
+        local = (positions[:, None] - k_pos[None, :]) < cfg.sliding_window
+        valid_local = valid & local
+        valid = jnp.where(is_global, valid, valid_local)
+    mask = valid[:, None, :]  # (b, 1, S) -> broadcast as (b, q=1, S)
+    o = mha(cfg, q, cache_k, cache_v, mask)
+    return _out(cfg, p, o), cache_k, cache_v

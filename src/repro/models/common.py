@@ -1,0 +1,194 @@
+"""Shared model components: norms, RoPE, MLPs, initializers, softcaps.
+
+Everything is functional: params are nested dicts of ``jnp`` arrays, and
+every function takes ``(cfg, params, inputs)``.  Master parameters are kept
+in ``cfg.param_dtype`` (fp32) and cast to the activation dtype at use —
+the mixed-precision policy lives here, not in the training loop.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_axis_size: int, dtype) -> jnp.ndarray:
+    """Truncated-normal fan-in init (the common LM choice)."""
+    std = 1.0 / math.sqrt(in_axis_size)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, dim: int | None = None) -> dict:
+    if cfg.non_parametric_norm:
+        return {}
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype=cfg.param_dtype)}
+    if cfg.norm == "layernorm" and cfg.use_bias:
+        p["bias"] = jnp.zeros((d,), dtype=cfg.param_dtype)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """RMSNorm / LayerNorm, optionally non-parametric (olmo-style)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        x = x * jax.lax.rsqrt(var + cfg.norm_eps)
+    else:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    if p:
+        scale = p["scale"].astype(jnp.float32)
+        if cfg.norm == "rmsnorm":
+            # gemma-style (1 + scale) keeps init at identity; we use plain
+            # scale initialized to 1 for generality.
+            x = x * scale
+        else:
+            x = x * scale
+        if "bias" in p:
+            x = x + p["bias"].astype(jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(cfg: ModelConfig, positions: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for given integer positions, shape (..., head_dim/2)."""
+    hd = cfg.head_size
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Softcap (gemma2)
+# ---------------------------------------------------------------------------
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None, *, layers: int | None = None) -> dict:
+    """Gated (SwiGLU/GeGLU) or plain 2-layer MLP.  ``layers`` stacks a
+    leading layer axis for scan-over-layers."""
+    d = cfg.d_model
+    dff = d_ff or cfg.d_ff
+    pref = () if layers is None else (layers,)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {}
+    if cfg.act.endswith("_glu"):
+        p["wi"] = dense_init(k1, (*pref, d, dff), d, cfg.param_dtype)
+        p["wg"] = dense_init(k3, (*pref, d, dff), d, cfg.param_dtype)
+    else:
+        p["wi"] = dense_init(k1, (*pref, d, dff), d, cfg.param_dtype)
+    p["wo"] = dense_init(k2, (*pref, dff, d), dff, cfg.param_dtype)
+    if cfg.use_bias:
+        p["bi"] = jnp.zeros((*pref, dff), dtype=cfg.param_dtype)
+        p["bo"] = jnp.zeros((*pref, d), dtype=cfg.param_dtype)
+    return p
+
+
+def _act_fn(name: str):
+    if name.startswith("silu"):
+        return jax.nn.silu
+    if name.startswith("gelu"):
+        return jax.nn.gelu
+    if name == "relu_sq":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def apply_mlp(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    dtype = x.dtype
+    act = _act_fn(cfg.act)
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dtype))
+    if "bi" in p:
+        h = h + p["bi"].astype(dtype)
+    h = act(h)
+    if "wg" in p:
+        h = h * jnp.einsum("...d,df->...f", x, p["wg"].astype(dtype))
+    out = jnp.einsum("...f,fd->...d", h, p["wo"].astype(dtype))
+    if "bo" in p:
+        out = out + p["bo"].astype(dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embed(cfg: ModelConfig, key) -> dict:
+    v = cfg.padded_vocab
+    p = {"embedding": embed_init(key, (v, cfg.d_model), cfg.param_dtype)}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = dense_init(
+            k2, (cfg.d_model, v), cfg.d_model, cfg.param_dtype
+        )
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.take(p["embedding"], tokens, axis=0).astype(cfg.activation_dtype())
+    # gemma-style sqrt(d) scaling keeps tied-embedding logits well ranged.
+    return x * jnp.asarray(math.sqrt(cfg.d_model), dtype=x.dtype)
+
+
+def unembed(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    w = p.get("unembed")
+    if w is None:
+        w = p["embedding"].T
+    logits = jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+    logits = softcap(logits, cfg.final_softcap)
+    if cfg.vocab_pad:
+        # Mask padded vocab entries out of every softmax/argmax.
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid, logits, -1e30)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross-entropy, fp32 accumulation.
+
+    The gold logit is picked with a one-hot einsum, NOT take_along_axis: a
+    gather along the vocab dim forces GSPMD to all-gather vocab-sharded
+    logits (tens of GB per device at 256k vocab); the one-hot contraction
+    keeps the reduction sharded and turns it into a cheap psum."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("...v,...v->...", logits, onehot)
+    return jnp.mean(logz - gold)

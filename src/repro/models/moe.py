@@ -1,0 +1,144 @@
+"""Mixture-of-Experts FFN (granite-moe: 40e top-8; llama4-scout: 16e top-1
+with a shared expert).
+
+Dispatch is capacity-based scatter/gather (GSPMD-friendly, linear memory):
+
+* router -> top-k experts per token;
+* position-in-expert via one-hot cumsum; tokens beyond capacity
+  ``C = ceil(tokens * k / E * capacity_factor)`` are dropped (their gate
+  contribution is zero — residual carries them, the standard Switch
+  behaviour);
+* dispatch to a dense ``(E, C, d)`` buffer via scatter-add, run every
+  expert's FFN as a batched einsum (experts axis shardable over 'model' —
+  expert parallelism), gather-combine weighted by the gates.
+
+An auxiliary load-balancing loss (Switch-style) is returned for training.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import _act_fn, dense_init, init_mlp, apply_mlp
+
+
+def _pin_groups(cfg: ModelConfig, x: jnp.ndarray, capacity_dim: int | None = None) -> jnp.ndarray:
+    """Anchor the leading group dim to the DP mesh axes.  GSPMD does not
+    reliably propagate shardings through the (b,s,d)->(G,g,d) reshape, and
+    an unsharded dispatch buffer costs TB-scale all-gathers.  When
+    ``cfg.moe_capacity_axis`` is set, the dispatch buffer's capacity dim is
+    sharded too (see configs.base)."""
+    if cfg.moe_group_axis is None:
+        return x
+    dims = [None] * (x.ndim - 1)
+    if capacity_dim is not None and cfg.moe_capacity_axis is not None:
+        dims[capacity_dim - 1] = cfg.moe_capacity_axis
+    spec = P(cfg.moe_group_axis, *dims)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def init_moe(cfg: ModelConfig, key, *, layers: int | None = None) -> dict:
+    d, e, dff = cfg.d_model, cfg.num_experts, cfg.expert_d_ff
+    pref = () if layers is None else (layers,)
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(kr, (*pref, d, e), d, cfg.param_dtype),
+        "wi": dense_init(k1, (*pref, e, d, dff), d, cfg.param_dtype),
+        "wo": dense_init(k2, (*pref, e, dff, d), dff, cfg.param_dtype),
+    }
+    if cfg.act.endswith("_glu"):
+        p["wg"] = dense_init(k3, (*pref, e, d, dff), d, cfg.param_dtype)
+    if cfg.shared_expert_d_ff:
+        import dataclasses
+
+        shared_cfg = dataclasses.replace(cfg, d_ff=cfg.shared_expert_d_ff)
+        p["shared"] = init_mlp(shared_cfg, ks, cfg.shared_expert_d_ff, layers=layers)
+    return p
+
+
+def moe_ffn(
+    cfg: ModelConfig, p: dict, x: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (b, s, d) -> (out, aux_loss).
+
+    Group-limited routing (GShard-style): tokens are reshaped to
+    ``(G, g, d)`` with G = cfg.moe_groups aligned to the data-parallel
+    shards, so the position-in-expert cumsum, the dispatch scatter and the
+    combine gather are all LOCAL to a shard.  A single global dispatch
+    would make GSPMD materialize an unsharded (E, C, d) buffer and TB-scale
+    all-gathers (observed in the dry-run before this restructure)."""
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    g_count = cfg.moe_groups if n % max(cfg.moe_groups, 1) == 0 else 1
+    g = n // g_count
+    dtype = x.dtype
+    xg = _pin_groups(cfg, x.reshape(g_count, g, d))
+
+    router_logits = jnp.einsum(
+        "Gnd,de->Gne", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)   # (G, g, e)
+    gates, idx = jax.lax.top_k(probs, k)             # (G, g, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss: e * sum_e f_e * p_e.
+    me = probs.mean(axis=(0, 1))                     # (e,) mean router prob
+    sel = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # (G, g, k, e)
+    ce = sel.mean(axis=(0, 1, 2))                    # dispatch fraction
+    aux = e * jnp.sum(me * ce)
+
+    capacity = max(1, int(math.ceil(g * k / e * cfg.capacity_factor)))
+
+    flat_e = idx.reshape(g_count, g * k)                       # (G, gk)
+    flat_gate = gates.reshape(g_count, g * k).astype(dtype)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # (G, gk, e)
+    pos = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1    # pos in expert
+    keep = pos < capacity
+    safe_pos = jnp.where(keep, pos, 0)
+
+    # Token rows for the k choices are contiguous (token i -> rows
+    # i*k..i*k+k-1), so dispatch input is a broadcast (no gather) and the
+    # final combine is a reshape-sum (no scatter).
+    contrib = jnp.broadcast_to(
+        xg[:, :, None, :], (g_count, g, k, d)
+    ).reshape(g_count, g * k, d)
+    contrib = jnp.where(keep[..., None], contrib, 0).astype(dtype)
+
+    # Dispatch: per-group scatter-add via vmap — the G batch dim stays a
+    # sharded batch dim of the scatter (indexing G explicitly makes GSPMD
+    # all-gather the buffer).
+    def scatter_g(e_g, pos_g, c_g):
+        return jnp.zeros((e, capacity, d), dtype=dtype).at[e_g, pos_g].add(c_g)
+
+    buf = _pin_groups(cfg, jax.vmap(scatter_g)(flat_e, safe_pos, contrib),
+                      capacity_dim=2)
+
+    # Expert FFNs as batched einsums — hidden dim shardable over 'model',
+    # G over 'data' (expert-parallel variant: shard e instead; §Perf).
+    act = _act_fn(cfg.act)
+    h = jnp.einsum("Gecd,edf->Gecf", buf, p["wi"].astype(dtype))
+    h = act(h)
+    if "wg" in p:
+        h = h * jnp.einsum("Gecd,edf->Gecf", buf, p["wg"].astype(dtype))
+    out_buf = _pin_groups(
+        cfg, jnp.einsum("Gecf,efd->Gecd", h, p["wo"].astype(dtype)),
+        capacity_dim=2,
+    )
+
+    # Combine: per-group gather of each kept choice, gate-weight, then
+    # reshape-sum over the k contiguous rows per token.
+    picked = jax.vmap(lambda ob, e_g, pos_g: ob[e_g, pos_g])(
+        out_buf, flat_e, safe_pos
+    )                                                           # (G, gk, d)
+    picked = picked * (flat_gate * keep.astype(dtype))[..., None]
+    out = _pin_groups(cfg, picked.reshape(g_count, g, k, d).sum(axis=2))
+
+    if "shared" in p:
+        out = out + apply_mlp(cfg, p["shared"], xg)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,272 @@
+"""RWKV6 "Finch" blocks (arXiv:2404.05892): attention-free token mixing
+with data-dependent per-channel decay.
+
+Per head (key/value dims D):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state update)
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)     (readout with bonus u)
+
+with w_t = exp(-exp(ww_t)) computed from the token (data-dependent decay),
+and token-shift interpolation x'_t = lerp(x_t, x_{t-1}, mu) feeding every
+projection (r, k, v, g, w).
+
+Three compute paths:
+* ``rwkv_scan_ref``      — sequential lax.scan oracle (tests);
+* ``rwkv_scan_chunked``  — chunked parallel form (default jnp path; the
+  intra-chunk part is O(c^2) matmuls, MXU-friendly);
+* ``repro.kernels.rwkv6``— the Pallas TPU kernel of the same chunked form.
+
+Decode keeps ``(S, shift)`` recurrent state — O(1) per token, which is why
+rwkv6 runs the ``long_500k`` shape that full-attention archs skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_norm, dense_init
+
+
+def init_rwkv_block(cfg: ModelConfig, key, *, layers: int | None = None) -> dict:
+    d = cfg.d_model
+    pref = () if layers is None else (layers,)
+    keys = jax.random.split(key, 8)
+    heads = d // cfg.rwkv_head_dim
+    p = {
+        # token-shift mixing coefficients per projection
+        "mu": jnp.full((*pref, 5, d), 0.5, dtype=cfg.param_dtype),
+        "wr": dense_init(keys[0], (*pref, d, d), d, cfg.param_dtype),
+        "wk": dense_init(keys[1], (*pref, d, d), d, cfg.param_dtype),
+        "wv": dense_init(keys[2], (*pref, d, d), d, cfg.param_dtype),
+        "wg": dense_init(keys[3], (*pref, d, d), d, cfg.param_dtype),
+        # data-dependent decay: low-rank ww = tanh(x' A) B + bias
+        "wd_a": dense_init(keys[4], (*pref, d, 64), d, cfg.param_dtype),
+        "wd_b": dense_init(keys[5], (*pref, 64, d), 64, cfg.param_dtype),
+        "wd_bias": jnp.full((*pref, d), -6.0, dtype=cfg.param_dtype),
+        "bonus_u": jnp.zeros((*pref, heads, cfg.rwkv_head_dim), dtype=cfg.param_dtype),
+        "wo": dense_init(keys[6], (*pref, d, d), d, cfg.param_dtype),
+        "ln_x_scale": jnp.ones((*pref, d), dtype=cfg.param_dtype),
+    }
+    return p
+
+
+def init_channel_mix(cfg: ModelConfig, key, *, layers: int | None = None) -> dict:
+    d, dff = cfg.d_model, cfg.d_ff
+    pref = () if layers is None else (layers,)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": jnp.full((*pref, 2, d), 0.5, dtype=cfg.param_dtype),
+        "wk": dense_init(k1, (*pref, d, dff), d, cfg.param_dtype),
+        "wv": dense_init(k2, (*pref, dff, d), dff, cfg.param_dtype),
+        "wr": dense_init(k3, (*pref, d, d), d, cfg.param_dtype),
+    }
+
+
+def token_shift(x: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
+    """x_{t-1} stream: shift right by one, first slot = carry (b, d)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# WKV scans
+# ---------------------------------------------------------------------------
+def rwkv_scan_ref(r, k, v, w, u, state):
+    """Sequential oracle.  r,k,w: (b, t, h, dk); v: (b, t, h, dv);
+    u: (h, dk); state: (b, h, dk, dv).  Returns (out, final_state)."""
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (b,h,dk) / (b,h,dv) / decays (b,h,dk)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, o_t
+
+    rs = jnp.moveaxis(r, 1, 0)
+    ks = jnp.moveaxis(k, 1, 0)
+    vs = jnp.moveaxis(v, 1, 0)
+    ws = jnp.moveaxis(w, 1, 0)
+    state, out = jax.lax.scan(step, state, (rs, ks, vs, ws))
+    return jnp.moveaxis(out, 0, 1), state
+
+
+def rwkv_scan_chunked(r, k, v, w, u, state, chunk: int = 64, unroll: bool = False):
+    """Chunked parallel form (mathematically identical to the ref).
+
+    Within a chunk of length c, with cumulative decays
+    A_t = prod_{i<=t} diag(w_i) (A_0 = I pre-token):
+
+      o_t = r_t^T A_t^{pre} S_in + intra-chunk lower-triangular part
+      S_out = A_c S_in + sum_t (prod_{i>t} w_i) k_t v_t^T
+
+    The intra-chunk part is two (c x c) matmuls per head — MXU-shaped.
+    """
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+    if t % chunk:
+        pad = chunk - t % chunk
+        zero = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zero(r), zero(k), zero(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    else:
+        pad = 0
+    tc = r.shape[1] // chunk
+    shape_c = (b, tc, chunk, h, dk)
+    rc = r.reshape(shape_c)
+    kc = k.reshape(shape_c)
+    vc = v.reshape(b, tc, chunk, h, dv)
+    wc = w.reshape(shape_c)
+
+    logw = jnp.log(jnp.maximum(wc.astype(jnp.float32), 1e-38))
+    cum = jnp.cumsum(logw, axis=2)                    # A_t incl. token t
+    cum_pre = cum - logw                              # A_t pre-token
+    total = cum[:, :, -1:, :, :]                      # full-chunk decay
+
+    a_pre = jnp.exp(cum_pre)                          # (b,tc,c,h,dk)
+    a_post = jnp.exp(total - cum)                     # decay from t -> chunk end
+
+    def chunk_step(S, inp):
+        rcu, kcu, vcu, a_pre_u, a_post_u, tot_u, w_u = inp
+        # Inter-chunk: queries read the carried state through their decay.
+        r_dec = rcu * a_pre_u.astype(rcu.dtype)                  # (b,c,h,dk)
+        o_inter = jnp.einsum("bchk,bhkv->bchv", r_dec, S)
+        # Intra-chunk: scores_ij = sum_k r_i a_pre_i / a_pre_j_incl * k_j
+        k_dec = kcu * a_post_u.astype(kcu.dtype)                 # k_j decayed to end
+        # score between i (query) and j<i (key): prod_{j<l<=i-1?} ... use
+        # ratio form: a_pre_i / (a_pre_j * w_j) = decay over (j, i) exclusive.
+        inv_k = kcu / jnp.maximum(
+            (a_pre_u * w_u).astype(kcu.dtype), 1e-30
+        )
+        scores = jnp.einsum("bchk,bdhk->bhcd", r_dec, inv_k)
+        c = rcu.shape[1]
+        tri = jnp.tril(jnp.ones((c, c), dtype=bool), k=-1)       # strictly lower
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        o_intra = jnp.einsum("bhcd,bdhv->bchv", scores, vcu)
+        # Bonus diagonal term: u ⊙ k_t v_t^T read by r_t.
+        diag = jnp.einsum("bchk,hk,bchk->bch", rcu, u.astype(rcu.dtype), kcu)
+        o_diag = diag[..., None] * vcu
+        # State update.
+        kv_end = jnp.einsum("bchk,bchv->bhkv", k_dec, vcu)
+        S = jnp.exp(tot_u)[:, 0, :, :, None].astype(S.dtype) * S + kv_end
+        return S, o_inter + o_intra + o_diag
+
+    xs = (
+        jnp.moveaxis(rc, 1, 0),
+        jnp.moveaxis(kc, 1, 0),
+        jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(a_pre, 1, 0),
+        jnp.moveaxis(a_post, 1, 0),
+        jnp.moveaxis(total, 1, 0),
+        jnp.moveaxis(wc, 1, 0),
+    )
+    if unroll:
+        # Python loop: keeps per-chunk flops visible to cost_analysis
+        # (while-loop bodies are counted once); dry-run cost samples only.
+        outs = []
+        for i in range(tc):
+            state, o_i = chunk_step(state, jax.tree.map(lambda x: x[i], xs))
+            outs.append(o_i)
+        out = jnp.stack(outs)
+    else:
+        state, out = jax.lax.scan(chunk_step, state, xs)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, tc * chunk, h, dv)
+    if pad:
+        out = out[:, :t]
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+def _projections(cfg: ModelConfig, p: dict, x: jnp.ndarray, prev: jnp.ndarray):
+    dtype = x.dtype
+    shifted = token_shift(x, prev)
+    mu = p["mu"].astype(dtype)  # (5, d)
+    mix = lambda i: x + mu[i] * (shifted - x)
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+    b, t, d = x.shape
+    h, dk = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    r = jnp.einsum("btd,de->bte", xr, p["wr"].astype(dtype)).reshape(b, t, h, dk)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"].astype(dtype)).reshape(b, t, h, dk)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"].astype(dtype)).reshape(b, t, h, dk)
+    g = jnp.einsum("btd,de->bte", xg, p["wg"].astype(dtype))
+    ww = (
+        jnp.einsum(
+            "bte,ef->btf",
+            jnp.tanh(jnp.einsum("btd,de->bte", xw, p["wd_a"].astype(dtype))),
+            p["wd_b"].astype(dtype),
+        )
+        + p["wd_bias"].astype(dtype)
+    )
+    w = jnp.exp(-jnp.exp(ww.astype(jnp.float32))).reshape(b, t, h, dk)
+    return r, k, v, g, w
+
+
+def rwkv_time_mix(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,
+    state: dict,
+    *,
+    use_ref: bool = False,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, dict]:
+    """state: {"S": (b,h,dk,dv), "shift": (b,d)}."""
+    b, t, d = x.shape
+    r, k, v, g, w = _projections(cfg, p, x, state["shift"])
+    u = p["bonus_u"].astype(jnp.float32)
+    S0 = state["S"]
+    if use_pallas:
+        from repro.kernels.rwkv6.ops import rwkv6_chunked
+
+        out, S = rwkv6_chunked(r, k, v, w, u, S0, interpret=interpret)
+    elif use_ref:
+        out, S = rwkv_scan_ref(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w, u, S0,
+        )
+    else:
+        out, S = rwkv_scan_chunked(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w, u, S0, chunk=cfg.inner_chunk,
+            unroll=cfg.unroll_inner,
+        )
+    out = out.reshape(b, t, d).astype(x.dtype)
+    # Per-head group norm then gate.
+    out = out.reshape(b, t, d // cfg.rwkv_head_dim, cfg.rwkv_head_dim)
+    mean = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = ((out - mean) * jax.lax.rsqrt(var + 64e-5)).reshape(b, t, d)
+    out = out * p["ln_x_scale"].astype(out.dtype)
+    out = out * jax.nn.silu(g)
+    y = jnp.einsum("btd,de->bte", out, p["wo"].astype(out.dtype))
+    new_state = {"S": S, "shift": x[:, -1, :]}
+    return y, new_state
+
+
+def rwkv_channel_mix(
+    cfg: ModelConfig, p: dict, x: jnp.ndarray, shift_prev: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    dtype = x.dtype
+    shifted = token_shift(x, shift_prev)
+    mu = p["mu"].astype(dtype)
+    xk = x + mu[0] * (shifted - x)
+    xr = x + mu[1] * (shifted - x)
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["wk"].astype(dtype))))
+    kv = jnp.einsum("btf,fd->btd", k, p["wv"].astype(dtype))
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"].astype(dtype)))
+    return r * kv, x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, *, layers: int) -> dict:
+    h = cfg.d_model // cfg.rwkv_head_dim
+    dk = cfg.rwkv_head_dim
+    return {
+        "S": jnp.zeros((layers, batch, h, dk, dk), dtype=jnp.float32),
+        "shift": jnp.zeros((layers, batch, cfg.d_model), dtype=cfg.activation_dtype()),
+        "cmix_shift": jnp.zeros(
+            (layers, batch, cfg.d_model), dtype=cfg.activation_dtype()
+        ),
+    }

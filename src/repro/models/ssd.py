@@ -1,0 +1,244 @@
+"""Mamba2 / SSD (state-space dual) blocks, used by the zamba2 hybrid.
+
+Per head h (head dim P, state dim N), with scalar decay per head/step:
+
+    a_t = exp(-exp(A_log_h) * dt_t)                  (data-dependent, scalar)
+    h_t = a_t * h_{t-1} + dt_t * (x_t ⊗ B_t)         (h: P x N)
+    y_t = h_t C_t + D_h * x_t
+
+dt_t = softplus(dt_proj(u) + dt_bias); B, C are shared across heads
+(multi-value attention analogy).  A short causal conv (window 4) precedes
+the SSM — its tail is the decode-time "conv state".
+
+Compute paths mirror rwkv.py: sequential ref scan, chunked-parallel jnp
+(default), and the Pallas ``repro.kernels.ssd`` kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+CONV_K = 4
+
+
+def init_ssd_block(cfg: ModelConfig, key, *, layers: int | None = None) -> dict:
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    p_dim = cfg.ssm_head_dim
+    heads = d_inner // p_dim
+    pref = () if layers is None else (layers,)
+    keys = jax.random.split(key, 8)
+    # Projections are kept per-component (z, x, B, C, dt) rather than fused:
+    # the depthwise conv is per-channel, so splitting is mathematically
+    # identical to the fused form, and each output dim gets a clean
+    # tensor-parallel sharding (no mid-shard split offsets).
+    return {
+        "wz": dense_init(keys[0], (*pref, d, d_inner), d, cfg.param_dtype),
+        "wx": dense_init(keys[3], (*pref, d, d_inner), d, cfg.param_dtype),
+        "wB": dense_init(keys[4], (*pref, d, n), d, cfg.param_dtype),
+        "wC": dense_init(keys[5], (*pref, d, n), d, cfg.param_dtype),
+        "wdt": dense_init(keys[6], (*pref, d, heads), d, cfg.param_dtype),
+        # Per-component depthwise convs (x sharded over model; B/C small,
+        # replicated) — equivalent to the fused conv, sharding-clean.
+        "conv_x_w": dense_init(keys[1], (*pref, CONV_K, d_inner), CONV_K, cfg.param_dtype),
+        "conv_x_b": jnp.zeros((*pref, d_inner), dtype=cfg.param_dtype),
+        "conv_B_w": dense_init(keys[2], (*pref, CONV_K, n), CONV_K, cfg.param_dtype),
+        "conv_B_b": jnp.zeros((*pref, n), dtype=cfg.param_dtype),
+        "conv_C_w": dense_init(keys[7], (*pref, CONV_K, n), CONV_K, cfg.param_dtype),
+        "conv_C_b": jnp.zeros((*pref, n), dtype=cfg.param_dtype),
+        "A_log": jnp.zeros((*pref, heads), dtype=cfg.param_dtype),
+        "D": jnp.ones((*pref, heads), dtype=cfg.param_dtype),
+        "dt_bias": jnp.zeros((*pref, heads), dtype=cfg.param_dtype),
+        "w_out": dense_init(keys[2], (*pref, d_inner, d), d_inner, cfg.param_dtype),
+        "norm_scale": jnp.ones((*pref, d_inner), dtype=cfg.param_dtype),
+    }
+
+
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, state: jnp.ndarray):
+    """Depthwise causal conv, window CONV_K.  x: (b, t, c); state: (b, K-1, c)
+    carries the previous K-1 inputs.  Returns (y, new_state)."""
+    full = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    t = x.shape[1]
+    y = jnp.zeros_like(x)
+    for i in range(CONV_K):
+        y = y + full[:, i : i + t, :] * w[i].astype(x.dtype)
+    y = jax.nn.silu(y + b.astype(x.dtype))
+    return y, full[:, -(CONV_K - 1):, :]
+
+
+# ---------------------------------------------------------------------------
+# SSD scans
+# ---------------------------------------------------------------------------
+def ssd_scan_ref(xh, dt, a, B, C, state):
+    """Sequential oracle.  xh: (b,t,h,p); dt,a: (b,t,h); B,C: (b,t,n);
+    state: (b,h,p,n).  Returns (y, final_state)."""
+
+    def step(S, inp):
+        x_t, dt_t, a_t, b_t, c_t = inp
+        dBx = jnp.einsum("bhp,bn,bh->bhpn", x_t, b_t, dt_t)
+        S = a_t[..., None, None] * S + dBx
+        y_t = jnp.einsum("bhpn,bn->bhp", S, c_t)
+        return S, y_t
+
+    xs = tuple(jnp.moveaxis(v, 1, 0) for v in (xh, dt, a, B, C))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def ssd_scan_chunked(xh, dt, a, B, C, state, chunk: int = 64, unroll: bool = False):
+    """Chunked parallel SSD form (identical math to the ref).
+
+    With per-(token,head) scalar decays a_t and L_t = prod_{i<=t} a_i:
+
+      intra: y_t += sum_{j<=t} (L_t / L_j) dt_j (C_t · B_j) x_j
+      inter: y_t += L_t^{pre} * (S_in C_t)
+      state: S_out = L_c S_in + sum_j (L_c / L_j) dt_j x_j B_j^T
+    """
+    b, t, h, p = xh.shape
+    n = B.shape[-1]
+    if t % chunk:
+        pad = chunk - t % chunk
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    else:
+        pad = 0
+    tc = xh.shape[1] // chunk
+    xc = xh.reshape(b, tc, chunk, h, p)
+    dtc = dt.reshape(b, tc, chunk, h)
+    ac = a.reshape(b, tc, chunk, h)
+    Bc = B.reshape(b, tc, chunk, n)
+    Cc = C.reshape(b, tc, chunk, n)
+
+    loga = jnp.log(jnp.maximum(ac.astype(jnp.float32), 1e-38))
+    cum = jnp.cumsum(loga, axis=2)          # L_t (inclusive)
+    total = cum[:, :, -1, :]                # (b, tc, h)
+
+    def chunk_step(S, inp):
+        # Derivation (S_in = carried state, L_t = exp(cum_t) inclusive):
+        #   S_t = L_t S_in + sum_{j<=t} (L_t/L_j) dt_j x_j B_j^T
+        #   y_t = S_t C_t
+        #       = L_t (S_in C_t)                                   [inter]
+        #       + sum_{j<=t} (L_t/L_j) dt_j (B_j . C_t) x_j        [intra]
+        #   S_out = L_c S_in + sum_j (L_c/L_j) dt_j x_j B_j^T
+        xcu, dtu, Bu, Cu, cumu, totu = inp
+        c = xcu.shape[1]
+        ratio = jnp.exp(cumu[:, :, None, :] - cumu[:, None, :, :])  # (b,t,j,h)
+        tri = jnp.tril(jnp.ones((c, c), dtype=bool))                # j <= t
+        ratio = jnp.where(tri[None, :, :, None], ratio, 0.0)
+        cb = jnp.einsum(
+            "bin,bjn->bij", Cu.astype(jnp.float32), Bu.astype(jnp.float32)
+        )
+        scores = ratio * cb[..., None] * dtu[:, None, :, :]         # (b,t,j,h)
+        y_intra = jnp.einsum("btjh,bjhp->bthp", scores, xcu.astype(jnp.float32))
+        y_inter = jnp.einsum(
+            "bhpn,bcn,bch->bchp", S, Cu.astype(jnp.float32), jnp.exp(cumu)
+        )
+        S_new = jnp.exp(totu)[:, :, None, None] * S + jnp.einsum(
+            "bch,bchp,bcn->bhpn",
+            dtu * jnp.exp(totu[:, None, :] - cumu),
+            xcu.astype(jnp.float32),
+            Bu.astype(jnp.float32),
+        )
+        return S_new, y_intra + y_inter
+
+    xs = tuple(
+        jnp.moveaxis(v, 1, 0) for v in (xc, dtc, Bc, Cc, cum, total)
+    )
+    if unroll:
+        # Python loop: keeps per-chunk flops visible to cost_analysis.
+        youts = []
+        for i in range(tc):
+            state, y_i = chunk_step(state, jax.tree.map(lambda x: x[i], xs))
+            youts.append(y_i)
+        ys = jnp.stack(youts)
+    else:
+        state, ys = jax.lax.scan(chunk_step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, tc * chunk, h, p)
+    if pad:
+        y = y[:, :t]
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+def ssd_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,
+    state: dict,
+    *,
+    use_ref: bool = False,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, dict]:
+    """state: {"ssm": (b,h,p,n) fp32, "conv": (b, K-1, d_inner+2n)}."""
+    b, t, d = x.shape
+    d_inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    p_dim = cfg.ssm_head_dim
+    heads = d_inner // p_dim
+    dtype = x.dtype
+
+    z = jnp.einsum("btd,de->bte", x, p["wz"].astype(dtype))
+    x_p = jnp.einsum("btd,de->bte", x, p["wx"].astype(dtype))
+    B_p = jnp.einsum("btd,dn->btn", x, p["wB"].astype(dtype))
+    C_p = jnp.einsum("btd,dn->btn", x, p["wC"].astype(dtype))
+    dt_raw = jnp.einsum("btd,dh->bth", x, p["wdt"].astype(dtype))
+    x_in, cs_x = causal_conv(x_p, p["conv_x_w"], p["conv_x_b"], state["conv_x"])
+    B, cs_B = causal_conv(B_p, p["conv_B_w"], p["conv_B_b"], state["conv_B"])
+    C, cs_C = causal_conv(C_p, p["conv_C_w"], p["conv_C_b"], state["conv_C"])
+    conv_state = {"conv_x": cs_x, "conv_B": cs_B, "conv_C": cs_C}
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (b, t, h)
+    a = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32))[None, None, :] * dt)
+    xh = x_in.reshape(b, t, heads, p_dim)
+
+    if use_pallas:
+        from repro.kernels.ssd.ops import ssd_chunked
+
+        y, S = ssd_chunked(xh, dt, a, B, C, state["ssm"], interpret=interpret)
+    elif use_ref:
+        y, S = ssd_scan_ref(
+            xh.astype(jnp.float32), dt, a,
+            B.astype(jnp.float32), C.astype(jnp.float32), state["ssm"],
+        )
+    else:
+        y, S = ssd_scan_chunked(
+            xh.astype(jnp.float32), dt, a,
+            B.astype(jnp.float32), C.astype(jnp.float32), state["ssm"],
+            chunk=cfg.inner_chunk, unroll=cfg.unroll_inner,
+        )
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, t, d_inner).astype(dtype)
+    # Gated RMSNorm (mamba2's norm-before-out-proj).
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(dtype)
+    y = y * p["norm_scale"].astype(dtype)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"].astype(dtype))
+    return out, {"ssm": S, **conv_state}
+
+
+def init_ssd_state(cfg: ModelConfig, batch: int, *, layers: int) -> dict:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    heads = d_inner // cfg.ssm_head_dim
+    act = cfg.activation_dtype()
+    return {
+        "ssm": jnp.zeros(
+            (layers, batch, heads, cfg.ssm_head_dim, n), dtype=jnp.float32
+        ),
+        "conv_x": jnp.zeros((layers, batch, CONV_K - 1, d_inner), dtype=act),
+        "conv_B": jnp.zeros((layers, batch, CONV_K - 1, n), dtype=act),
+        "conv_C": jnp.zeros((layers, batch, CONV_K - 1, n), dtype=act),
+    }

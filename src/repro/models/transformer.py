@@ -1,0 +1,498 @@
+"""The unified causal LM covering the assigned decoder-only families:
+
+* ``dense``  — olmo-1b, command-r-35b (parallel residual), gemma2-2b
+  (local/global alternation + softcaps), starcoder2-3b (biases, plain MLP);
+* ``vlm``    — llava-next-34b (patch-embedding stub prepended to tokens);
+* ``moe``    — granite-moe (40e top-8), llama4-scout (16e top-1 + shared);
+* ``ssm``    — rwkv6 (attention-free);
+* ``hybrid`` — zamba2 (mamba2 stack with a *shared* attention block every
+  ``shared_attn_period`` layers).
+
+Two stack execution modes, selected by ``cfg.scan_layers``:
+
+* True (default): one ``jax.lax.scan`` over stacked parameters — a single
+  compiled body regardless of depth, which keeps 512-device dry-run
+  compiles tractable.  Heterogeneity (local vs global attention) is a
+  scanned per-layer flag, not a separate body.
+* False: an unrolled python loop — used by the dry-run's roofline cost
+  extrapolation (XLA's cost_analysis counts while-loop bodies once, so
+  costs are measured at small unrolled depths and extrapolated linearly).
+
+Functional API:
+    params = init_lm(cfg, rng)
+    logits, aux = lm_forward(cfg, params, batch)                (train/prefill)
+    cache = init_lm_cache(cfg, batch, max_seq)
+    logits, cache = lm_decode(cfg, params, tokens, positions, cache)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rwkv as R
+from repro.models import ssd as M
+from repro.models.attention import (
+    attention_block,
+    decode_attention_block,
+    init_attention,
+    init_kv_cache,
+)
+from repro.models.common import (
+    apply_mlp,
+    apply_norm,
+    embed_tokens,
+    init_embed,
+    init_mlp,
+    init_norm,
+    unembed,
+)
+from repro.models.moe import init_moe, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Layer-kind helpers
+# ---------------------------------------------------------------------------
+def global_flags(cfg: ModelConfig) -> np.ndarray:
+    """(L,) bool — which layers use full (global) attention.  gemma2
+    alternates local/global with the *global* layer every Nth."""
+    L = cfg.num_layers
+    if cfg.local_global_period:
+        idx = np.arange(L)
+        return (idx % cfg.local_global_period) == (cfg.local_global_period - 1)
+    return np.ones((L,), dtype=bool)
+
+
+def _n_shared_applications(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.shared_attn_period if cfg.shared_attn_period else 0
+
+
+def _layer_slice(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_lm(cfg: ModelConfig, key) -> dict:
+    ke, kb = jax.random.split(key, 2)
+    L = cfg.num_layers
+    p: dict = {"embed": init_embed(cfg, ke), "final_norm": init_norm(cfg)}
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        ka, km = jax.random.split(kb, 2)
+        p["layers"] = {
+            "ln1": _stack_norms(cfg, L),
+            "attn": init_attention(cfg, ka, layers=L),
+            "ln2": _stack_norms(cfg, L),
+        }
+        if cfg.post_block_norm:
+            p["layers"]["post_ln1"] = _stack_norms(cfg, L)
+            p["layers"]["post_ln2"] = _stack_norms(cfg, L)
+        if cfg.family == "moe":
+            p["layers"]["moe"] = init_moe(cfg, km, layers=L)
+        else:
+            p["layers"]["mlp"] = init_mlp(cfg, km, layers=L)
+    elif cfg.family == "ssm":  # rwkv6
+        k1, k2 = jax.random.split(kb)
+        p["layers"] = {
+            "ln1": _stack_norms(cfg, L),
+            "tmix": R.init_rwkv_block(cfg, k1, layers=L),
+            "ln2": _stack_norms(cfg, L),
+            "cmix": R.init_channel_mix(cfg, k2, layers=L),
+        }
+    elif cfg.family == "hybrid":  # zamba2
+        k1, k2, k3 = jax.random.split(kb, 3)
+        p["layers"] = {
+            "ln1": _stack_norms(cfg, L),
+            "ssd": M.init_ssd_block(cfg, k1, layers=L),
+        }
+        # ONE shared attention+MLP block reused every shared_attn_period
+        # layers (zamba2's parameter-sharing trick).
+        p["shared"] = {
+            "ln1": init_norm(cfg),
+            "attn": init_attention(cfg, k2),
+            "ln2": init_norm(cfg),
+            "mlp": init_mlp(cfg, k3),
+        }
+    else:
+        raise ValueError(f"init_lm does not handle family={cfg.family}")
+    return p
+
+
+def _stack_norms(cfg: ModelConfig, L: int) -> dict:
+    base = init_norm(cfg)
+    return {k: jnp.broadcast_to(v, (L, *v.shape)).copy() for k, v in base.items()}
+
+
+# ---------------------------------------------------------------------------
+# Per-layer block bodies (shared by the scan and unrolled paths)
+# ---------------------------------------------------------------------------
+def _attn_layer(cfg, p_l, x, aux, positions, is_global, *, use_flash, interpret):
+    h = apply_norm(cfg, p_l["ln1"], x)
+    h = attention_block(
+        cfg, p_l["attn"], h, positions, is_global,
+        use_flash=use_flash, interpret=interpret,
+    )
+    if cfg.post_block_norm:
+        h = apply_norm(cfg, p_l["post_ln1"], h)
+    if cfg.parallel_residual:
+        # command-r: attn and MLP read the same normed input.
+        m = apply_mlp(cfg, p_l["mlp"], apply_norm(cfg, p_l["ln1"], x))
+        return x + h + m, aux
+    x = x + h
+    h2 = apply_norm(cfg, p_l["ln2"], x)
+    if cfg.family == "moe":
+        m, a = moe_ffn(cfg, p_l["moe"], h2)
+        aux = aux + a
+    else:
+        m = apply_mlp(cfg, p_l["mlp"], h2)
+    if cfg.post_block_norm:
+        m = apply_norm(cfg, p_l["post_ln2"], m)
+    return x + m, aux
+
+
+def _rwkv_layer(cfg, p_l, s_l, x, *, interpret):
+    h, st = R.rwkv_time_mix(
+        cfg, p_l["tmix"], apply_norm(cfg, p_l["ln1"], x),
+        {"S": s_l["S"], "shift": s_l["shift"]}, interpret=interpret,
+    )
+    x = x + h
+    h2, cshift = R.rwkv_channel_mix(
+        cfg, p_l["cmix"], apply_norm(cfg, p_l["ln2"], x), s_l["cmix_shift"]
+    )
+    new_state = {"S": st["S"], "shift": st["shift"], "cmix_shift": cshift}
+    return x + h2, new_state
+
+
+def _shared_attn_block(cfg, shared, x, positions, *, use_flash, interpret):
+    h = apply_norm(cfg, shared["ln1"], x)
+    h = attention_block(
+        cfg, shared["attn"], h, positions,
+        use_flash=use_flash, interpret=interpret,
+    )
+    x = x + h
+    m = apply_mlp(cfg, shared["mlp"], apply_norm(cfg, shared["ln2"], x))
+    return x + m
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def lm_forward(
+    cfg: ModelConfig,
+    params: dict,
+    batch: dict,
+    *,
+    use_flash: bool = False,
+    interpret: bool = False,
+    unembed_last_only: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """batch: {"tokens": (b, s)[, "patch_embeds": (b, P, d)]}.
+    Returns (logits (b, s_total, V), aux_loss scalar)."""
+    x = embed_tokens(cfg, params["embed"], batch["tokens"])
+    if cfg.family == "vlm":
+        patches = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    kw = dict(use_flash=use_flash, interpret=interpret)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        x, aux = _attn_stack_forward(cfg, params, x, positions, **kw)
+    elif cfg.family == "ssm":
+        x, aux = _rwkv_stack_forward(cfg, params, x, interpret=interpret)
+    elif cfg.family == "hybrid":
+        x, aux = _hybrid_stack_forward(cfg, params, x, positions, **kw)
+    else:
+        raise ValueError(cfg.family)
+
+    if unembed_last_only:
+        x = x[:, -1:, :]
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)
+    return logits, aux
+
+
+def _attn_stack_forward(cfg, params, x, positions, **kw):
+    flags = global_flags(cfg)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def layer(p_l, x, aux, positions, is_global):
+        return _attn_layer(cfg, p_l, x, aux, positions, is_global, **kw)
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+
+    if not cfg.scan_layers:
+        aux = aux0
+        for i in range(cfg.num_layers):
+            x, aux = layer(
+                _layer_slice(params["layers"], i), x, aux,
+                positions, bool(flags[i]),
+            )
+        return x, aux
+
+    def body(carry, xs):
+        x, aux = carry
+        p_l, is_global = xs
+        x, aux = layer(p_l, x, aux, positions, is_global)
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(
+        body, (x, aux0), (params["layers"], jnp.asarray(flags))
+    )
+    return x, aux
+
+
+def _rwkv_stack_forward(cfg, params, x, *, interpret):
+    b = x.shape[0]
+    state = R.init_rwkv_state(cfg, b, layers=cfg.num_layers)
+
+    def layer(p_l, s_l, x):
+        return _rwkv_layer(cfg, p_l, s_l, x, interpret=interpret)
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+
+    if not cfg.scan_layers:
+        for i in range(cfg.num_layers):
+            x, _ = layer(
+                _layer_slice(params["layers"], i), _layer_slice(state, i), x
+            )
+        return x, jnp.zeros((), jnp.float32)
+
+    def body(x, xs):
+        p_l, s_l = xs
+        x, _ = layer(p_l, s_l, x)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, (params["layers"], state))
+    return x, jnp.zeros((), jnp.float32)
+
+
+def _hybrid_stack_forward(cfg, params, x, positions, **kw):
+    b = x.shape[0]
+    state = M.init_ssd_state(cfg, b, layers=cfg.num_layers)
+    period = cfg.shared_attn_period
+    shared = params["shared"]
+    interpret = kw.get("interpret", False)
+
+    def mamba_layer(p_l, s_l, x):
+        h, _ = M.ssd_block(
+            cfg, p_l["ssd"], apply_norm(cfg, p_l["ln1"], x), s_l,
+            interpret=interpret,
+        )
+        return x + h
+
+    def shared_layer(x, positions):
+        return _shared_attn_block(cfg, shared, x, positions, **kw)
+
+    if cfg.remat:
+        mamba_layer = jax.checkpoint(mamba_layer)
+        shared_layer = jax.checkpoint(shared_layer)
+
+    if not cfg.scan_layers:
+        for i in range(cfg.num_layers):
+            x = mamba_layer(
+                _layer_slice(params["layers"], i), _layer_slice(state, i), x
+            )
+            if period and (i + 1) % period == 0:
+                x = shared_layer(x, positions)
+        return x, jnp.zeros((), jnp.float32)
+
+    def body(carry, xs):
+        x, idx = carry
+        p_l, s_l = xs
+        x = mamba_layer(p_l, s_l, x)
+        if period:
+            x = jax.lax.cond(
+                (idx + 1) % period == 0,
+                lambda v: shared_layer(v, positions),
+                lambda v: v,
+                x,
+            )
+        return (x, idx + 1), None
+
+    (x, _), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.int32)), (params["layers"], state)
+    )
+    return x, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against a cache)
+# ---------------------------------------------------------------------------
+def init_lm_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    if cfg.family in ("dense", "vlm", "moe"):
+        return init_kv_cache(cfg, batch, max_seq, layers=cfg.num_layers)
+    if cfg.family == "ssm":
+        return R.init_rwkv_state(cfg, batch, layers=cfg.num_layers)
+    if cfg.family == "hybrid":
+        cache = M.init_ssd_state(cfg, batch, layers=cfg.num_layers)
+        napp = _n_shared_applications(cfg)
+        kv = init_kv_cache(cfg, batch, max_seq, layers=napp)
+        cache["shared_k"] = kv["k"]
+        cache["shared_v"] = kv["v"]
+        return cache
+    raise ValueError(cfg.family)
+
+
+def _decode_attn_layer(cfg, p_l, x, positions, k_l, v_l, is_global):
+    h = apply_norm(cfg, p_l["ln1"], x)
+    h, k_l, v_l = decode_attention_block(
+        cfg, p_l["attn"], h, positions, k_l, v_l, is_global
+    )
+    if cfg.post_block_norm:
+        h = apply_norm(cfg, p_l["post_ln1"], h)
+    if cfg.parallel_residual:
+        m = apply_mlp(cfg, p_l["mlp"], apply_norm(cfg, p_l["ln1"], x))
+        return x + h + m, k_l, v_l
+    x = x + h
+    h2 = apply_norm(cfg, p_l["ln2"], x)
+    if cfg.family == "moe":
+        m, _ = moe_ffn(cfg, p_l["moe"], h2)
+    else:
+        m = apply_mlp(cfg, p_l["mlp"], h2)
+    if cfg.post_block_norm:
+        m = apply_norm(cfg, p_l["post_ln2"], m)
+    return x + m, k_l, v_l
+
+
+def _decode_rwkv_layer(cfg, p_l, s_l, x):
+    h, st = R.rwkv_time_mix(
+        cfg, p_l["tmix"], apply_norm(cfg, p_l["ln1"], x),
+        {"S": s_l["S"], "shift": s_l["shift"]}, use_ref=True,
+    )
+    x = x + h
+    h2, cshift = R.rwkv_channel_mix(
+        cfg, p_l["cmix"], apply_norm(cfg, p_l["ln2"], x), s_l["cmix_shift"]
+    )
+    return x + h2, {"S": st["S"], "shift": st["shift"], "cmix_shift": cshift}
+
+
+def lm_decode(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jnp.ndarray,      # (b, 1)
+    positions: jnp.ndarray,   # (b,)
+    cache: dict,
+) -> tuple[jnp.ndarray, dict]:
+    x = embed_tokens(cfg, params["embed"], tokens)  # (b, 1, d)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        flags = global_flags(cfg)
+        if not cfg.scan_layers:
+            ks, vs = [], []
+            for i in range(cfg.num_layers):
+                x, k_l, v_l = _decode_attn_layer(
+                    cfg, _layer_slice(params["layers"], i), x, positions,
+                    cache["k"][i], cache["v"][i], bool(flags[i]),
+                )
+                ks.append(k_l)
+                vs.append(v_l)
+            new_cache = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+        else:
+            def body(x, layer):
+                p_l, is_global, k_l, v_l = layer
+                x, k_l, v_l = _decode_attn_layer(
+                    cfg, p_l, x, positions, k_l, v_l, is_global
+                )
+                return x, (k_l, v_l)
+
+            x, (ks, vs) = jax.lax.scan(
+                body, x,
+                (params["layers"], jnp.asarray(flags), cache["k"], cache["v"]),
+            )
+            new_cache = {"k": ks, "v": vs}
+
+    elif cfg.family == "ssm":
+        if not cfg.scan_layers:
+            states = []
+            for i in range(cfg.num_layers):
+                x, st = _decode_rwkv_layer(
+                    cfg, _layer_slice(params["layers"], i),
+                    _layer_slice(cache, i), x,
+                )
+                states.append(st)
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        else:
+            def body(x, layer):
+                p_l, s_l = layer
+                return _decode_rwkv_layer(cfg, p_l, s_l, x)
+
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+
+    elif cfg.family == "hybrid":
+        period = cfg.shared_attn_period
+        shared = params["shared"]
+        napp = _n_shared_applications(cfg)
+        mamba_state = {
+            k: cache[k] for k in ("ssm", "conv_x", "conv_B", "conv_C")
+        }
+
+        def shared_decode(x, sk, sv, app):
+            k_l = jax.lax.dynamic_index_in_dim(sk, app, 0, keepdims=False)
+            v_l = jax.lax.dynamic_index_in_dim(sv, app, 0, keepdims=False)
+            h = apply_norm(cfg, shared["ln1"], x)
+            h, k_l, v_l = decode_attention_block(
+                cfg, shared["attn"], h, positions, k_l, v_l
+            )
+            x = x + h
+            m = apply_mlp(cfg, shared["mlp"], apply_norm(cfg, shared["ln2"], x))
+            sk = jax.lax.dynamic_update_index_in_dim(sk, k_l, app, 0)
+            sv = jax.lax.dynamic_update_index_in_dim(sv, v_l, app, 0)
+            return x + m, sk, sv
+
+        if not cfg.scan_layers:
+            sk, sv = cache["shared_k"], cache["shared_v"]
+            states = []
+            for i in range(cfg.num_layers):
+                p_l = _layer_slice(params["layers"], i)
+                s_l = _layer_slice(mamba_state, i)
+                h, st = M.ssd_block(
+                    cfg, p_l["ssd"], apply_norm(cfg, p_l["ln1"], x), s_l,
+                    use_ref=True,
+                )
+                x = x + h
+                states.append(st)
+                if period and (i + 1) % period == 0:
+                    x, sk, sv = shared_decode(x, sk, sv, (i + 1) // period - 1)
+            new_mamba = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+            new_cache = {**new_mamba, "shared_k": sk, "shared_v": sv}
+        else:
+            def body(carry, layer):
+                x, idx, sk, sv = carry
+                p_l, s_l = layer
+                h, st = M.ssd_block(
+                    cfg, p_l["ssd"], apply_norm(cfg, p_l["ln1"], x), s_l,
+                    use_ref=True,
+                )
+                x = x + h
+                if period:
+                    app = ((idx + 1) // period - 1) % max(napp, 1)
+
+                    def do(args):
+                        return shared_decode(*args, app)
+
+                    x, sk, sv = jax.lax.cond(
+                        (idx + 1) % period == 0,
+                        do, lambda a: a, (x, sk, sv),
+                    )
+                return (x, idx + 1, sk, sv), st
+
+            (x, _, sk, sv), new_mamba = jax.lax.scan(
+                body,
+                (x, jnp.zeros((), jnp.int32), cache["shared_k"], cache["shared_v"]),
+                (params["layers"], mamba_state),
+            )
+            new_cache = {**new_mamba, "shared_k": sk, "shared_v": sv}
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)
+    return logits, new_cache

@@ -1,0 +1,3 @@
+from repro.runtime.gang import GangRuntime, MLJob
+
+__all__ = ["GangRuntime", "MLJob"]

@@ -1,0 +1,5 @@
+from repro.serve.engine import (
+    BatchingQueue, greedy_generate, make_decode_step, make_prefill_step,
+)
+
+__all__ = ["BatchingQueue", "greedy_generate", "make_decode_step", "make_prefill_step"]

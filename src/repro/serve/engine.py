@@ -1,0 +1,120 @@
+"""Serving steps: prefill (process a full prompt, build the cache) and
+decode (one token per call against the cache), plus a batched greedy
+generation loop used by the examples and the runtime's serve jobs.
+
+``make_prefill_step`` / ``make_decode_step`` return pure jit-able
+functions; the dry-run lowers ``decode_step`` for the ``decode_*`` /
+``long_*`` shapes per the assignment ("one new token with a KV cache of
+seq_len").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, forward, init_cache
+
+
+def make_prefill_step(cfg: ModelConfig, *, use_flash: bool = False,
+                      interpret: bool = False, last_token_only: bool = False):
+    """``last_token_only`` returns logits for the final position only — the
+    only logits serving needs after a prefill.  XLA then dead-code-
+    eliminates the full (b, s, vocab) unembedding: at 32k x 200k-vocab
+    that removes the single largest memory consumer of the prefill step."""
+
+    def prefill_step(params: dict, batch: dict) -> jnp.ndarray:
+        if last_token_only:
+            logits, _ = forward(
+                cfg, params, batch, use_flash=use_flash, interpret=interpret,
+                unembed_last_only=True,
+            )
+            return logits
+        logits, _ = forward(
+            cfg, params, batch, use_flash=use_flash, interpret=interpret
+        )
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def _decode(params: dict, tokens: jnp.ndarray, positions: jnp.ndarray,
+                cache: dict):
+        return decode_step(cfg, params, tokens, positions, cache)
+
+    return _decode
+
+
+def greedy_generate(
+    cfg: ModelConfig,
+    params: dict,
+    prompt: jnp.ndarray,      # (b, s0)
+    max_new_tokens: int,
+    max_seq: int | None = None,
+) -> jnp.ndarray:
+    """Greedy decoding: prefill via repeated decode (cache-exact), then
+    generate.  Small-scale utility — the production path jits decode_step
+    once and drives it from the runtime."""
+    b, s0 = prompt.shape
+    max_seq = max_seq or (s0 + max_new_tokens)
+    cache = init_cache(cfg, b, max_seq)
+    step = jax.jit(make_decode_step(cfg))
+
+    tokens = prompt[:, :1]
+    out = [prompt]
+    logits = None
+    for t in range(s0 + max_new_tokens - 1):
+        pos = jnp.full((b,), t, jnp.int32)
+        logits, cache = step(params, tokens, pos, cache)
+        if t + 1 < s0:
+            tokens = prompt[:, t + 1 : t + 2]
+        else:
+            tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            out.append(tokens)
+    return jnp.concatenate(out, axis=1)
+
+
+class BatchingQueue:
+    """Continuous-batching request queue for the serve runtime: requests
+    join/leave the decode batch at token boundaries (slot-based, static
+    batch shape — the JAX-friendly formulation of vLLM-style batching)."""
+
+    def __init__(self, cfg: ModelConfig, batch_slots: int, max_seq: int):
+        self.cfg = cfg
+        self.batch_slots = batch_slots
+        self.max_seq = max_seq
+        self.free = list(range(batch_slots))
+        self.active: dict[int, dict] = {}   # slot -> request
+        self.waiting: list[dict] = []
+        self.finished: list[dict] = []
+
+    def submit(self, request: dict) -> None:
+        """request: {"id", "prompt" (list[int]), "max_new_tokens"}."""
+        self.waiting.append(request)
+
+    def admit(self) -> list[tuple[int, dict]]:
+        admitted = []
+        while self.free and self.waiting:
+            slot = self.free.pop()
+            req = self.waiting.pop(0)
+            req = {**req, "generated": [], "pos": 0}
+            self.active[slot] = req
+            admitted.append((slot, req))
+        return admitted
+
+    def step_done(self, slot: int, token: int) -> None:
+        req = self.active[slot]
+        if req["pos"] + 1 >= len(req["prompt"]):
+            req["generated"].append(token)
+        req["pos"] += 1
+        done_len = len(req["generated"]) >= req["max_new_tokens"]
+        if done_len or req["pos"] >= self.max_seq - 1:
+            self.finished.append(req)
+            del self.active[slot]
+            self.free.append(slot)
+
+    @property
+    def idle(self) -> bool:
+        return not self.active and not self.waiting

@@ -1,0 +1,259 @@
+"""PartitionSpec rules: DP / TP / EP / SP sharding for every arch family.
+
+The mesh axes are ("data", "model") single-pod and ("pod", "data", "model")
+multi-pod (see launch/mesh.py).  Parameters are tensor-parallel over
+"model" and replicated over "data"/"pod"; batches are data-parallel over
+("pod", "data"); KV caches shard heads over "model" when divisible, and
+the *sequence* axis over "data" when the batch is too small to split
+(long_500k, batch=1 — the flash-decode layout).
+
+Every rule degrades gracefully: an axis is applied only when the dimension
+is divisible by the mesh axis size, otherwise that dim is replicated (e.g.
+command-r's 8 kv heads on a 16-way model axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _shard_if(mesh: Mesh, dim: int, axis) -> Any:
+    """Return the axis name if ``dim`` divides evenly, else None."""
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (path-rule based)
+# ---------------------------------------------------------------------------
+def _leaf_spec(mesh: Mesh, path: tuple[str, ...], shape: tuple[int, ...],
+               cfg: ModelConfig | None = None) -> P:
+    name = path[-1]
+    ctx = set(path)
+    # leading layer axis from scan stacking (decoder-only stacks use
+    # "layers"; whisper uses "encoder"/"decoder")
+    stacked = bool(ctx & {"layers", "encoder", "decoder"})
+    lead = (None,) if stacked else ()
+
+    def pspec(*dims):
+        return P(*lead, *dims)
+
+    # -- embeddings -------------------------------------------------------
+    if name == "embedding":
+        return P(_shard_if(mesh, shape[0], "model"), None)
+    if name == "unembed":
+        return P(None, _shard_if(mesh, shape[-1], "model"))
+    if name in ("enc_pos", "dec_pos"):
+        return P(None, None)
+
+    # -- attention ----------------------------------------------------------
+    if "attn" in ctx or "self_attn" in ctx or "cross_attn" in ctx:
+        heads = shape[-2] if name in ("wq", "wk", "wv") else None
+        if name in ("wq", "wk", "wv"):
+            return pspec(None, _shard_if(mesh, shape[-2], "model"), None)
+        if name == "wo":
+            return pspec(_shard_if(mesh, shape[-3], "model"), None, None)
+        if name in ("bq", "bk", "bv"):
+            return pspec(_shard_if(mesh, shape[-2], "model"), None)
+        if name == "bo":
+            return pspec(None)
+
+    # -- MoE (expert weights; the shared expert is a plain MLP) -----------------
+    if "moe" in ctx and "shared" not in ctx:
+        if name == "router":
+            return pspec(None, None)
+        if name in ("wi", "wg"):   # (E, d, f): expert-local TP on f
+            return pspec(None, None, _shard_if(mesh, shape[-1], "model"))
+        if name == "wo":           # (E, f, d)
+            return pspec(None, _shard_if(mesh, shape[-2], "model"), None)
+        if name in ("bi",):
+            return pspec(None, _shard_if(mesh, shape[-1], "model"))
+        if name in ("bo",):
+            return pspec(None, None)
+
+    # -- MLP (incl. moe shared expert / zamba2 shared block) --------------------
+    if "mlp" in ctx or "cmix" in ctx or "shared" in ctx:
+        if name in ("wi", "wg", "wk"):   # (d, f)
+            return pspec(None, _shard_if(mesh, shape[-1], "model"))
+        if name in ("wo", "wv"):         # (f, d)
+            return pspec(_shard_if(mesh, shape[-2], "model"), None)
+        if name == "wr":                 # rwkv cmix receptance (d, d)
+            return pspec(None, _shard_if(mesh, shape[-1], "model"))
+        if name == "bi":
+            return pspec(_shard_if(mesh, shape[-1], "model"))
+        if name == "bo":
+            return pspec(None)
+        if name == "mu":
+            return pspec(None, None)
+
+    # -- RWKV time mix -----------------------------------------------------------
+    if "tmix" in ctx:
+        if name in ("wr", "wk", "wv", "wg"):   # (d, d): head-major out dim
+            return pspec(None, _shard_if(mesh, shape[-1], "model"))
+        if name == "wo":
+            return pspec(_shard_if(mesh, shape[-2], "model"), None)
+        if name == "bonus_u":                  # (h, dk)
+            return pspec(_shard_if(mesh, shape[-2], "model"), None)
+        if name in ("wd_a", "wd_b"):
+            return pspec(None, None)
+        if name in ("wd_bias", "ln_x_scale"):
+            return pspec(_shard_if(mesh, shape[-1], "model"))
+        if name == "mu":
+            return pspec(None, None)
+
+    # -- SSD (mamba2) ---------------------------------------------------------------
+    if "ssd" in ctx:
+        if name in ("wz", "wx"):               # (d, d_inner)
+            return pspec(None, _shard_if(mesh, shape[-1], "model"))
+        if name == "w_out":                    # (d_inner, d)
+            return pspec(_shard_if(mesh, shape[-2], "model"), None)
+        if name in ("conv_x_w",):              # (K, d_inner)
+            return pspec(None, _shard_if(mesh, shape[-1], "model"))
+        if name in ("conv_x_b", "norm_scale"):
+            return pspec(_shard_if(mesh, shape[-1], "model"))
+        if name in ("wB", "wC", "wdt", "conv_B_w", "conv_C_w",
+                    "conv_B_b", "conv_C_b", "A_log", "D", "dt_bias"):
+            return pspec(*(None,) * (len(shape) - (1 if stacked else 0)))
+
+    # -- norms / everything small: replicate ------------------------------------------
+    return P(*(None,) * len(shape))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    """Build a PartitionSpec pytree matching ``params_shape`` (a pytree of
+    ShapeDtypeStruct, e.g. from jax.eval_shape(init_model...))."""
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        return _leaf_spec(mesh, path, tuple(node.shape), cfg)
+
+    return walk((), params_shape)
+
+
+def state_specs(cfg: ModelConfig, mesh: Mesh, state_shape, *,
+                zero_opt: bool = False) -> Any:
+    """{"params": ..., "opt": {"m","v","step"}} spec tree.
+
+    ``zero_opt`` (§Perf, ZeRO-2-style): Adam moments additionally shard
+    their leading (layer-stack) dim over 'data' when divisible — gradients
+    then reduce-scatter into the moment shards and the Adam update is
+    1/16th the work and memory per device; parameters stay replicated over
+    data for a cheap forward."""
+    pspecs = param_specs(cfg, mesh, state_shape["params"])
+
+    def zero(spec_node, shape_node):
+        if isinstance(spec_node, dict):
+            return {
+                k: zero(spec_node[k], shape_node[k]) for k in spec_node
+            }
+        dims = list(spec_node)
+        shp = tuple(shape_node.shape)
+        if (
+            dims
+            and dims[0] is None
+            and len(shp) >= 2
+            and shp[0] % _axis_size(mesh, "data") == 0
+        ):
+            dims[0] = "data"
+            return P(*dims)
+        return spec_node
+
+    mspecs = (
+        zero(pspecs, state_shape["params"]) if zero_opt else pspecs
+    )
+    return {
+        "params": pspecs,
+        "opt": {"m": mspecs, "v": mspecs, "step": P()},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig) -> dict:
+    dp = dp_axes(mesh)
+    bdim = _shard_if(mesh, shape.global_batch, dp)
+    out = {"tokens": P(bdim, None)}
+    if shape.kind == "train":
+        out["labels"] = P(bdim, None)
+    if shape.kind == "decode":
+        out["positions"] = P(bdim)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["patch_embeds"] = P(bdim, None, None)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        out["frame_embeds"] = P(bdim, None, None)
+    return out
+
+
+def cache_specs_sharding(
+    cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, cache_shape
+) -> Any:
+    """Sharding for the decode cache.  batch >= data => batch-shard;
+    batch == 1 (long_500k) => shard the cache *sequence* over data
+    (flash-decode: partial attention per shard, combined by GSPMD)."""
+    dp = dp_axes(mesh)
+    b = shape.global_batch
+    batch_ok = b % _axis_size(mesh, dp) == 0
+
+    def leaf(path, node):
+        name = path[-1]
+        shp = tuple(node.shape)
+        if name in ("k", "v", "shared_k", "shared_v", "xk", "xv"):
+            # (L, b, S, kvh, hs)
+            kvh_axis = _shard_if(mesh, shp[3], "model")
+            if batch_ok:
+                return P(None, dp, None, kvh_axis, None)
+            return P(None, None, _shard_if(mesh, shp[2], "data"), kvh_axis, None)
+        if name == "ssm":       # (L, b, h, p, n)
+            return P(
+                None, dp if batch_ok else None,
+                _shard_if(mesh, shp[2], "model"), None, None,
+            )
+        if name == "S":         # rwkv (L, b, h, dk, dv)
+            return P(
+                None, dp if batch_ok else None,
+                _shard_if(mesh, shp[2], "model"), None, None,
+            )
+        if name in ("shift", "cmix_shift"):   # (L, b, d)
+            return P(None, dp if batch_ok else None, None)
+        if name.startswith("conv_"):          # (L, b, K-1, c)
+            return P(
+                None, dp if batch_ok else None, None,
+                _shard_if(mesh, shp[3], "model"),
+            )
+        return P(*(None,) * len(shp))
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        return leaf(path, node)
+
+    return walk((), cache_shape)
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,223 @@
+"""Roofline analysis from compiled XLA artifacts (no hardware required).
+
+Sources
+-------
+* ``compiled.cost_analysis()`` -> HLO FLOPs / bytes of the per-device
+  program.  CAVEAT: XLA counts while-loop (lax.scan) bodies ONCE, so the
+  dry-run measures costs on small *unrolled* depths (``scan_layers=False``)
+  and extrapolates linearly in depth: cost(L) = base + L * body, with
+  (base, body) solved from two compiles at depths u and 2u
+  (u = the layer-pattern period).
+* ``compiled.as_text()`` -> collective ops.  Operands are printed as %refs
+  (no inline shapes), so we parse each collective's RESULT shape(s) and its
+  replica group size n, and charge ring wire-bytes per device:
+
+    all-reduce          2 * Z * (n-1)/n          (Z = result bytes)
+    all-gather          Z * (n-1)/n
+    reduce-scatter      Z * (n-1)                (operand = n * result)
+    all-to-all          Z * (n-1)/n
+    collective-permute  Z
+
+Hardware constants (TPU v5e-like, per the assignment):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+Terms (seconds, per chip):
+  compute    = HLO_FLOPs / PEAK_FLOPS
+  memory     = HLO_bytes / HBM_BW
+  collective = collective_wire_bytes / ICI_BW
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+ICI_BW = 50e9           # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*)\[([0-9,]*)\]")
+_RESULT_RE = re.compile(
+    r"=\s+((?:\([^=]*?\))|(?:[a-z]+[0-9]*\[[0-9,]*\]\S*))\s+"
+    r"([a-z0-9\-]+?)(-start|-done)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # collective-permute etc.: conservative
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_op.values()))
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def scaled(self, factor_by: dict | None = None):
+        return self
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Wire bytes per device per collective (see module docstring)."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        m = _RESULT_RE.search(line)
+        if not m:
+            continue
+        result_sig, op, async_suffix = m.group(1), m.group(2), m.group(3)
+        if async_suffix == "-done":
+            continue
+        if op not in _COLLECTIVES:
+            continue
+        z = sum(
+            _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(result_sig)
+        )
+        n = _group_size(line)
+        if op == "all-reduce":
+            wire = 2.0 * z * (n - 1) / max(n, 1)
+        elif op == "all-gather":
+            wire = z * (n - 1) / max(n, 1)
+        elif op == "reduce-scatter":
+            wire = z * (n - 1)
+        elif op == "all-to-all":
+            wire = z * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            wire = z
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + wire
+        stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per device
+    bytes_accessed: float        # per device
+    collective_bytes: float      # per device, wire model
+    collectives: CollectiveStats | None = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def summary(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes_accessed,
+            "coll_bytes": self.collective_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def measure_compiled(compiled) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    stats = parse_collectives(compiled.as_text())
+    return Roofline(
+        flops=flops,
+        bytes_accessed=nbytes,
+        collective_bytes=stats.total_bytes,
+        collectives=stats,
+    )
+
+
+def extrapolate_depth(r1: Roofline, r2: Roofline, u: int, L: int) -> Roofline:
+    """Linear-in-depth extrapolation from unrolled depths u and 2u to L:
+    cost(L) = base + L*body with body = (r2 - r1)/u, base = r1 - u*body."""
+
+    def ext(a: float, b: float) -> float:
+        body = (b - a) / u
+        base = a - u * body
+        return max(base + L * body, 0.0)
+
+    stats = CollectiveStats()
+    ops = set(r1.collectives.bytes_by_op) | set(r2.collectives.bytes_by_op)
+    for op in ops:
+        a = r1.collectives.bytes_by_op.get(op, 0.0)
+        b = r2.collectives.bytes_by_op.get(op, 0.0)
+        stats.bytes_by_op[op] = ext(a, b)
+        ca = r1.collectives.count_by_op.get(op, 0)
+        cb = r2.collectives.count_by_op.get(op, 0)
+        stats.count_by_op[op] = int(round(ext(float(ca), float(cb))))
+    return Roofline(
+        flops=ext(r1.flops, r2.flops),
+        bytes_accessed=ext(r1.bytes_accessed, r2.bytes_accessed),
+        collective_bytes=ext(r1.collective_bytes, r2.collective_bytes),
+        collectives=stats,
+    )
+
+
+def model_flops(cfg, shape, *, backward: bool) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D (train) or 2·N·D (inference) with
+    N = active params, D = tokens processed."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

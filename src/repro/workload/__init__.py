@@ -1,0 +1,17 @@
+from repro.workload.fb import (
+    FB_CLASSES,
+    WorkloadSpec,
+    fb_cluster,
+    fb_dataset,
+    job_class,
+    ml_dataset,
+)
+
+__all__ = [
+    "FB_CLASSES",
+    "WorkloadSpec",
+    "fb_cluster",
+    "fb_dataset",
+    "job_class",
+    "ml_dataset",
+]

@@ -1,0 +1,14 @@
+import os
+
+# Smoke tests and benchmarks must see the REAL device count (the dry-run
+# alone forces 512 host devices, in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+
+    return jax.random.PRNGKey(0)

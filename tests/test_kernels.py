@@ -1,0 +1,193 @@
+"""Per-kernel correctness sweeps: shapes x dtypes, assert_allclose against
+the pure-jnp oracles, executed with pallas interpret=True on CPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv6.kernel import rwkv6_chunked_bhtd
+from repro.kernels.rwkv6.ref import rwkv6_ref
+from repro.kernels.ssd.kernel import ssd_chunked_bhtp
+from repro.kernels.ssd.ref import ssd_ref
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize(
+        "b,h,kvh,s,hd,bq,bkv",
+        [
+            (1, 2, 2, 64, 32, 32, 32),     # MHA
+            (2, 4, 2, 128, 64, 64, 32),    # GQA 2:1
+            (1, 8, 1, 128, 32, 32, 64),    # MQA
+            (2, 2, 2, 96, 32, 32, 32),     # padding (96 % 32 == 0, 3 blocks)
+            (1, 2, 2, 80, 32, 32, 32),     # ragged q padding
+        ],
+    )
+    def test_causal_matches_ref(self, b, h, kvh, s, hd, bq, bkv):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, h, s, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, kvh, s, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, kvh, s, hd), jnp.float32)
+        out = flash_attention_bhsd(
+            q, k, v, scale=hd**-0.5, block_q=bq, block_kv=bkv, interpret=True
+        )
+        ref = attention_ref(q, k, v, scale=hd**-0.5)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("window", [16, 48, 100])
+    def test_sliding_window(self, window):
+        b, h, s, hd = 1, 2, 128, 32
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (b, h, s, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, h, s, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, h, s, hd), jnp.float32)
+        out = flash_attention_bhsd(
+            q, k, v, scale=hd**-0.5, window=window,
+            block_q=32, block_kv=32, interpret=True,
+        )
+        ref = attention_ref(q, k, v, scale=hd**-0.5, window=window)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_bf16_inputs(self):
+        b, h, s, hd = 1, 2, 64, 32
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (b, h, s, hd), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (b, h, s, hd), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, h, s, hd), jnp.bfloat16)
+        out = flash_attention_bhsd(
+            q, k, v, scale=hd**-0.5, block_q=32, block_kv=32, interpret=True
+        )
+        ref = attention_ref(q, k, v, scale=hd**-0.5)
+        np.testing.assert_allclose(
+            out.astype(np.float32), ref.astype(np.float32), atol=2e-2
+        )
+
+
+def _rwkv_inputs(key, b, h, t, dk, dv, decay_sharpness=2.0):
+    ks = jax.random.split(key, 6)
+    r = jax.random.normal(ks[0], (b, h, t, dk))
+    k = jax.random.normal(ks[1], (b, h, t, dk))
+    v = jax.random.normal(ks[2], (b, h, t, dv))
+    # Realistic decays near 1 (w = exp(-exp(ww)), ww ~ N(-decay_sharpness,1))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, h, t, dk)) - decay_sharpness))
+    u = 0.1 * jax.random.normal(ks[4], (h, dk))
+    s0 = 0.1 * jax.random.normal(ks[5], (b, h, dk, dv))
+    return r, k, v, w, u, s0
+
+
+class TestRWKV6Kernel:
+    @pytest.mark.parametrize(
+        "b,h,t,d,chunk",
+        [(1, 1, 32, 8, 16), (2, 3, 100, 16, 32), (1, 2, 64, 32, 64),
+         (2, 2, 65, 16, 32)],  # ragged chunk padding
+    )
+    def test_matches_sequential_ref(self, b, h, t, d, chunk):
+        r, k, v, w, u, s0 = _rwkv_inputs(jax.random.PRNGKey(0), b, h, t, d, d)
+        out, s = rwkv6_chunked_bhtd(r, k, v, w, u, s0, chunk=chunk,
+                                    interpret=True)
+        out_r, s_r = rwkv6_ref(r, k, v, w, u, s0)
+        np.testing.assert_allclose(out, out_r, atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(s, s_r, atol=1e-4, rtol=1e-3)
+
+    def test_state_carries_across_calls(self):
+        """Two chunked calls == one long call (streaming decode parity)."""
+        b, h, t, d = 1, 2, 64, 16
+        r, k, v, w, u, s0 = _rwkv_inputs(jax.random.PRNGKey(1), b, h, t, d, d)
+        full, s_full = rwkv6_chunked_bhtd(r, k, v, w, u, s0, chunk=16,
+                                          interpret=True)
+        half = t // 2
+        o1, s1 = rwkv6_chunked_bhtd(
+            r[:, :, :half], k[:, :, :half], v[:, :, :half], w[:, :, :half],
+            u, s0, chunk=16, interpret=True,
+        )
+        o2, s2 = rwkv6_chunked_bhtd(
+            r[:, :, half:], k[:, :, half:], v[:, :, half:], w[:, :, half:],
+            u, s1, chunk=16, interpret=True,
+        )
+        np.testing.assert_allclose(
+            jnp.concatenate([o1, o2], axis=2), full, atol=1e-3, rtol=1e-3
+        )
+        np.testing.assert_allclose(s2, s_full, atol=1e-4, rtol=1e-3)
+
+
+def _ssd_inputs(key, b, h, t, p, n):
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (b, h, t, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, h, t)))
+    a = jnp.exp(-jnp.exp(jax.random.normal(ks[2], (b, h, t)) - 1.0) * dt)
+    B = jax.random.normal(ks[3], (b, t, n))
+    C = jax.random.normal(ks[4], (b, t, n))
+    s0 = 0.1 * jax.random.normal(ks[5], (b, h, p, n))
+    return x, dt, a, B, C, s0
+
+
+class TestSSDKernel:
+    @pytest.mark.parametrize(
+        "b,h,t,p,n,chunk",
+        [(1, 1, 32, 8, 8, 16), (2, 3, 100, 16, 8, 32), (1, 2, 64, 32, 16, 64),
+         (1, 2, 70, 16, 8, 32)],
+    )
+    def test_matches_sequential_ref(self, b, h, t, p, n, chunk):
+        x, dt, a, B, C, s0 = _ssd_inputs(jax.random.PRNGKey(0), b, h, t, p, n)
+        y, s = ssd_chunked_bhtp(x, dt, a, B, C, s0, chunk=chunk, interpret=True)
+        y_r, s_r = ssd_ref(x, dt, a, B, C, s0)
+        np.testing.assert_allclose(y, y_r, atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(s, s_r, atol=1e-4, rtol=1e-3)
+
+    def test_state_carries_across_calls(self):
+        b, h, t, p, n = 1, 2, 64, 16, 8
+        x, dt, a, B, C, s0 = _ssd_inputs(jax.random.PRNGKey(1), b, h, t, p, n)
+        full, s_full = ssd_chunked_bhtp(x, dt, a, B, C, s0, chunk=16,
+                                        interpret=True)
+        half = t // 2
+        y1, s1 = ssd_chunked_bhtp(
+            x[:, :, :half], dt[:, :, :half], a[:, :, :half],
+            B[:, :half], C[:, :half], s0, chunk=16, interpret=True,
+        )
+        y2, s2 = ssd_chunked_bhtp(
+            x[:, :, half:], dt[:, :, half:], a[:, :, half:],
+            B[:, half:], C[:, half:], s1, chunk=16, interpret=True,
+        )
+        np.testing.assert_allclose(
+            jnp.concatenate([y1, y2], axis=2), full, atol=1e-3, rtol=1e-3
+        )
+        np.testing.assert_allclose(s2, s_full, atol=1e-4, rtol=1e-3)
+
+
+class TestModelScansVsRefs:
+    """The model-level chunked scans (used when the Pallas kernel is off)
+    must match the sequential refs too."""
+
+    def test_rwkv_model_chunked(self):
+        from repro.models.rwkv import rwkv_scan_chunked, rwkv_scan_ref
+
+        b, t, h, d = 2, 50, 2, 16
+        ks = jax.random.split(jax.random.PRNGKey(3), 6)
+        r = jax.random.normal(ks[0], (b, t, h, d))
+        k = jax.random.normal(ks[1], (b, t, h, d))
+        v = jax.random.normal(ks[2], (b, t, h, d))
+        w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, t, h, d)) - 2))
+        u = 0.1 * jax.random.normal(ks[4], (h, d))
+        s0 = 0.1 * jax.random.normal(ks[5], (b, h, d, d))
+        o1, s1 = rwkv_scan_ref(r, k, v, w, u, s0)
+        o2, s2 = rwkv_scan_chunked(r, k, v, w, u, s0, chunk=16)
+        np.testing.assert_allclose(o1, o2, atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(s1, s2, atol=1e-4, rtol=1e-3)
+
+    def test_ssd_model_chunked(self):
+        from repro.models.ssd import ssd_scan_chunked, ssd_scan_ref
+
+        b, t, h, p, n = 2, 50, 2, 16, 8
+        ks = jax.random.split(jax.random.PRNGKey(4), 6)
+        x = jax.random.normal(ks[0], (b, t, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+        a = jnp.exp(-jnp.exp(jax.random.normal(ks[2], (b, t, h)) - 1) * dt)
+        B = jax.random.normal(ks[3], (b, t, n))
+        C = jax.random.normal(ks[4], (b, t, n))
+        s0 = 0.1 * jax.random.normal(ks[5], (b, h, p, n))
+        y1, s1 = ssd_scan_ref(x, dt, a, B, C, s0)
+        y2, s2 = ssd_scan_chunked(x, dt, a, B, C, s0, chunk=16)
+        np.testing.assert_allclose(y1, y2, atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(s1, s2, atol=1e-4, rtol=1e-3)

@@ -1,0 +1,279 @@
+"""Scheduler-core behaviour tests: the paper's mechanisms in isolation."""
+
+import math
+
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    FairScheduler,
+    FIFOScheduler,
+    HFSPConfig,
+    HFSPScheduler,
+    JobSpec,
+    Phase,
+    Preemption,
+    Simulator,
+    TaskSpec,
+)
+from repro.core.vcluster import (
+    VirtualCluster,
+    discrete_allocation,
+    max_min_allocation,
+    project_finish_times,
+)
+
+
+def mk_job(jid, arrival, n_map, dur, n_red=0, red_dur=0.0, hosts=()):
+    return JobSpec(
+        job_id=jid,
+        arrival_time=arrival,
+        map_tasks=tuple(
+            TaskSpec(jid, Phase.MAP, i, dur, input_hosts=hosts)
+            for i in range(n_map)
+        ),
+        reduce_tasks=tuple(
+            TaskSpec(jid, Phase.REDUCE, i, red_dur) for i in range(n_red)
+        ),
+    )
+
+
+def small_cluster(machines=2, mslots=2, rslots=1):
+    return ClusterSpec(
+        num_machines=machines,
+        map_slots_per_machine=mslots,
+        reduce_slots_per_machine=rslots,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Virtual cluster / PS math
+# ---------------------------------------------------------------------------
+class TestMaxMin:
+    def test_uncapped_equal_share(self):
+        alloc = max_min_allocation({1: (10, 1.0), 2: (10, 1.0)}, 10)
+        assert alloc[1] == pytest.approx(5.0)
+        assert alloc[2] == pytest.approx(5.0)
+
+    def test_capped_redistribution(self):
+        alloc = max_min_allocation({1: (2, 1.0), 2: (100, 1.0)}, 10)
+        assert alloc[1] == pytest.approx(2.0)
+        assert alloc[2] == pytest.approx(8.0)
+
+    def test_weights(self):
+        alloc = max_min_allocation({1: (100, 3.0), 2: (100, 1.0)}, 8)
+        assert alloc[1] == pytest.approx(6.0)
+        assert alloc[2] == pytest.approx(2.0)
+
+    def test_discrete_small_first_leftovers(self):
+        # 3 jobs, 4 slots: continuous share 4/3 -> floor 1 each, leftover
+        # goes to the smallest job first.
+        alloc = discrete_allocation(
+            {1: (10, 1.0), 2: (10, 1.0), 3: (10, 1.0)},
+            4,
+            {1: 5, 2: 1, 3: 9},
+        )
+        assert sum(alloc.values()) == 4
+        assert alloc[2] == 2  # smallest rank gets the leftover
+
+    def test_discrete_never_exceeds_cap(self):
+        alloc = discrete_allocation({1: (1, 1.0), 2: (3, 1.0)}, 10, {1: 1, 2: 3})
+        assert alloc[1] == 1
+        assert alloc[2] == 3
+
+
+class TestProjectedFinish:
+    def test_fsp_paper_example(self):
+        """The paper's Fig. 1 example: j1 (30 s), j2 (10 s), j3 (10 s) on a
+        unit-speed single server; arrivals 0/10/15.  Under PS, j2 finishes
+        first, then j3, then j1."""
+        # At t=15: j1 has ~22.5s left (ran alone 10s, shared 5s), j2 has
+        # 7.5s left, j3 has 10s.  PS finish order must be j2, j3, j1.
+        fin = project_finish_times(
+            {1: (22.5, 1, 1.0), 2: (7.5, 1, 1.0), 3: (10.0, 1, 1.0)},
+            1.0,
+            15.0,
+        )
+        order = sorted(fin, key=fin.get)
+        assert order == [2, 3, 1]
+
+    def test_infinite_size_sorts_last(self):
+        fin = project_finish_times(
+            {1: (math.inf, 5, 1.0), 2: (10.0, 5, 1.0)}, 4, 0.0
+        )
+        assert math.isinf(fin[1])
+        assert math.isfinite(fin[2])
+
+    def test_aging_preserves_order(self):
+        vc = VirtualCluster(phase=Phase.MAP, slots=4)
+        vc.add_job(1, 100.0, 10)
+        vc.add_job(2, 40.0, 10)
+        before = vc.schedule_order(0.0)
+        vc.age(5.0)
+        assert vc.schedule_order(5.0) == before
+
+    def test_virtual_cap_shrinks_with_tail(self):
+        vc = VirtualCluster(phase=Phase.MAP, slots=8)
+        vc.add_job(1, 100.0, 10)   # 10 tasks x 10 s
+        v = vc.jobs[1]
+        assert v.effective_cap() == 10
+        vc.age(8.0)  # 8 slots x 8 s = 64 s of virtual work done
+        assert v.effective_cap() == math.ceil((100 - 64) / 10)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end simulator behaviour
+# ---------------------------------------------------------------------------
+class TestSimulator:
+    def test_single_job_runs_to_completion(self):
+        cluster = small_cluster()
+        jobs = [mk_job(0, 0.0, 4, 10.0)]
+        res = Simulator(cluster, FIFOScheduler(cluster), jobs).run()
+        assert res.completion[0] == pytest.approx(10.0, abs=1.0)
+
+    def test_waves(self):
+        """8 tasks x 10 s on 4 slots = two waves = 20 s."""
+        cluster = small_cluster()
+        jobs = [mk_job(0, 0.0, 8, 10.0)]
+        res = Simulator(cluster, FIFOScheduler(cluster), jobs).run()
+        assert res.completion[0] == pytest.approx(20.0, abs=1.0)
+
+    def test_fifo_head_of_line_blocking(self):
+        """FIFO: a tiny job behind a big one waits for the whole big job."""
+        cluster = small_cluster()
+        jobs = [mk_job(0, 0.0, 8, 50.0), mk_job(1, 1.0, 1, 1.0)]
+        res = Simulator(cluster, FIFOScheduler(cluster), jobs).run()
+        assert res.sojourn[1] > 40.0
+
+    def test_hfsp_rescues_small_job(self):
+        """HFSP: the tiny job preempts and finishes quickly."""
+        cluster = small_cluster()
+        jobs = [mk_job(0, 0.0, 8, 50.0), mk_job(1, 1.0, 1, 1.0)]
+        res = Simulator(cluster, HFSPScheduler(cluster), jobs).run()
+        assert res.sojourn[1] < 15.0
+
+    @pytest.mark.parametrize("mode", [Preemption.EAGER, Preemption.WAIT,
+                                      Preemption.KILL])
+    def test_all_preemption_modes_complete(self, mode):
+        cluster = small_cluster()
+        jobs = [
+            mk_job(0, 0.0, 8, 30.0),
+            mk_job(1, 5.0, 2, 5.0),
+            mk_job(2, 6.0, 2, 5.0),
+        ]
+        sch = HFSPScheduler(cluster, HFSPConfig(preemption=mode))
+        res = Simulator(cluster, sch, jobs).run()
+        assert len(res.completion) == 3
+
+    def test_kill_wastes_work(self):
+        """KILL restarts tasks from scratch => makespan of the big job is
+        strictly worse than with EAGER suspend/resume."""
+        def run(mode):
+            cluster = small_cluster()
+            jobs = [mk_job(0, 0.0, 4, 100.0), mk_job(1, 50.0, 4, 5.0)]
+            sch = HFSPScheduler(cluster, HFSPConfig(preemption=mode))
+            return Simulator(cluster, sch, jobs).run()
+
+        eager = run(Preemption.EAGER)
+        kill = run(Preemption.KILL)
+        assert kill.completion[0] > eager.completion[0] + 20.0
+
+    def test_reduce_phase_runs(self):
+        cluster = small_cluster()
+        jobs = [mk_job(0, 0.0, 2, 5.0, n_red=2, red_dur=10.0)]
+        res = Simulator(cluster, HFSPScheduler(cluster), jobs).run()
+        assert res.completion[0] == pytest.approx(15.0, abs=2.0)
+
+    def test_delay_scheduling_prefers_local(self):
+        cluster = small_cluster(machines=4, mslots=1)
+        # All tasks' data lives on machine 0 only.
+        jobs = [mk_job(0, 0.0, 3, 5.0, hosts=(0,))]
+        sch = HFSPScheduler(cluster)
+        res = Simulator(cluster, sch, jobs).run()
+        # Delay scheduling waits (bounded) for the local slot: most tasks
+        # run locally, and at least one scheduling opportunity was skipped.
+        assert res.locality_fraction >= 2 / 3
+        assert sch.stats.delay_sched_waits > 0
+        assert res.locality_hits >= 2
+
+    def test_hysteresis_fallback(self):
+        cluster = ClusterSpec(
+            num_machines=2, map_slots_per_machine=2,
+            reduce_slots_per_machine=0,
+            suspend_bytes_hi=100, suspend_bytes_lo=10,
+        )
+        big = JobSpec(
+            job_id=0, arrival_time=0.0,
+            map_tasks=tuple(
+                TaskSpec(0, Phase.MAP, i, 100.0, state_bytes=90)
+                for i in range(4)
+            ),
+            reduce_tasks=(),
+        )
+        small = mk_job(1, 5.0, 4, 1.0)
+        small2 = mk_job(2, 6.0, 4, 1.0)
+        sch = HFSPScheduler(cluster)
+        Simulator(cluster, sch, [big, small, small2]).run()
+        assert sch.stats.hysteresis_fallbacks >= 1
+
+    def test_eager_dma_cost_charged(self):
+        """With a DMA cost model, every resume rolls progress back by
+        state_bytes / dma_bw — total runtime grows by the swap cost."""
+        cluster = ClusterSpec(
+            num_machines=2, map_slots_per_machine=1,
+            reduce_slots_per_machine=0, dma_bandwidth=1.0,  # 1 byte/s
+        )
+        big = JobSpec(
+            job_id=0, arrival_time=0.0,
+            map_tasks=tuple(
+                TaskSpec(0, Phase.MAP, i, 50.0, state_bytes=10)
+                for i in range(2)
+            ),
+            reduce_tasks=(),
+        )
+        small = mk_job(1, 5.0, 1, 5.0)
+        sch = HFSPScheduler(cluster)
+        res = Simulator(cluster, sch, [big, small]).run()
+        assert sch.stats.suspensions >= 1
+        # The suspended task loses its pre-suspension progress to the
+        # 10-byte swap-in at 1 B/s: the job takes > 55 s.
+        assert res.completion[0] >= 55.0
+
+
+# ---------------------------------------------------------------------------
+# Size estimation (Training module)
+# ---------------------------------------------------------------------------
+class TestEstimation:
+    def test_estimate_converges_to_truth(self):
+        cluster = small_cluster(machines=4, mslots=4)
+        jobs = [mk_job(0, 0.0, 20, 7.0)]
+        sch = HFSPScheduler(cluster)
+        Simulator(cluster, sch, jobs).run()
+        est = sch.jobs[0].est_size[Phase.MAP]
+        assert est == pytest.approx(20 * 7.0, rel=0.01)
+
+    def test_xi_infinite_parks_job(self):
+        cluster = small_cluster()
+        sch = HFSPScheduler(cluster, HFSPConfig(xi=math.inf))
+        jobs = [mk_job(0, 0.0, 4, 5.0)]
+        res = Simulator(cluster, sch, jobs).run()
+        # Training still runs the sample set, so the job completes.
+        assert 0 in res.completion
+
+    def test_reduce_progress_estimation(self):
+        """REDUCE tasks longer than Delta are estimated via sigma=Delta/p
+        before completion (Sect. 3.2.1)."""
+        cluster = small_cluster()
+        sch = HFSPScheduler(cluster, HFSPConfig(delta=10.0))
+        jobs = [mk_job(0, 0.0, 1, 1.0, n_red=2, red_dur=100.0)]
+        sim = Simulator(cluster, sch, jobs)
+        sim.run(until=30.0)
+        est = sch.jobs[0].est_size.get(Phase.REDUCE)
+        assert est == pytest.approx(200.0, rel=0.05)
+
+    def test_fair_scheduler_shares(self):
+        cluster = small_cluster(machines=2, mslots=2)  # 4 slots
+        jobs = [mk_job(0, 0.0, 8, 10.0), mk_job(1, 0.5, 8, 10.0)]
+        res = Simulator(cluster, FairScheduler(cluster), jobs).run()
+        # Equal shares: both finish around 40 s (8 tasks x 10 s / 2 slots).
+        assert abs(res.sojourn[0] - res.sojourn[1]) < 12.0

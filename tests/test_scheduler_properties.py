@@ -1,0 +1,166 @@
+"""Property-based tests (hypothesis) on scheduler/simulator invariants."""
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ClusterSpec,
+    FairScheduler,
+    FIFOScheduler,
+    HFSPConfig,
+    HFSPScheduler,
+    JobSpec,
+    Phase,
+    Preemption,
+    Simulator,
+    TaskSpec,
+)
+from repro.core.types import TaskState
+from repro.core.vcluster import discrete_allocation, max_min_allocation
+
+
+# -- strategies ---------------------------------------------------------------
+@st.composite
+def workload(draw, max_jobs=6, max_tasks=12):
+    n_jobs = draw(st.integers(1, max_jobs))
+    jobs = []
+    t = 0.0
+    for jid in range(n_jobs):
+        t += draw(st.floats(0.0, 20.0))
+        n_map = draw(st.integers(1, max_tasks))
+        n_red = draw(st.integers(0, 4))
+        map_dur = draw(st.floats(1.0, 60.0))
+        red_dur = draw(st.floats(1.0, 120.0))
+        jobs.append(
+            JobSpec(
+                job_id=jid,
+                arrival_time=t,
+                map_tasks=tuple(
+                    TaskSpec(jid, Phase.MAP, i, map_dur) for i in range(n_map)
+                ),
+                reduce_tasks=tuple(
+                    TaskSpec(jid, Phase.REDUCE, i, red_dur)
+                    for i in range(n_red)
+                ),
+            )
+        )
+    return jobs
+
+
+SCHEDS = {
+    "fifo": lambda c: FIFOScheduler(c),
+    "fair": lambda c: FairScheduler(c),
+    "hfsp-eager": lambda c: HFSPScheduler(c),
+    "hfsp-wait": lambda c: HFSPScheduler(
+        c, HFSPConfig(preemption=Preemption.WAIT)
+    ),
+    "hfsp-kill": lambda c: HFSPScheduler(
+        c, HFSPConfig(preemption=Preemption.KILL)
+    ),
+}
+
+
+@given(jobs=workload(), name=st.sampled_from(sorted(SCHEDS)))
+@settings(max_examples=40, deadline=None)
+def test_every_job_completes_and_conservation(jobs, name):
+    """Liveness + work conservation: every job completes; completion is
+    never before arrival + serialized_size / total_slots; and no task is
+    left in a non-DONE state."""
+    cluster = ClusterSpec(
+        num_machines=2, map_slots_per_machine=2, reduce_slots_per_machine=1
+    )
+    sch = SCHEDS[name](cluster)
+    res = Simulator(cluster, sch, jobs).run(max_events=500_000)
+    assert set(res.completion) == {j.job_id for j in jobs}
+    for j in jobs:
+        soj = res.sojourn[j.job_id]
+        assert soj > 0
+        # Work conservation lower bound: a job cannot finish faster than
+        # its critical path (longest single task) nor faster than its
+        # serialized size over all slots.
+        lower = max(
+            max((t.duration for t in j.map_tasks), default=0.0),
+            j.size_map / cluster.slots(Phase.MAP)
+            if j.map_tasks
+            else 0.0,
+        )
+        assert soj >= lower - 1e-6
+    js_states = sch.jobs
+    for js in js_states.values():
+        for att in js.tasks.values():
+            assert att.state is TaskState.DONE
+
+
+@given(jobs=workload())
+@settings(max_examples=25, deadline=None)
+def test_fifo_completion_order_matches_arrival(jobs):
+    """FIFO with uniform priorities completes MAP-only jobs in arrival
+    order (same-duration tasks; ignoring multi-wave interleaving ties)."""
+    jobs = [
+        JobSpec(
+            job_id=j.job_id,
+            arrival_time=j.arrival_time,
+            map_tasks=j.map_tasks,
+            reduce_tasks=(),
+        )
+        for j in jobs
+    ]
+    cluster = ClusterSpec(
+        num_machines=1, map_slots_per_machine=1, reduce_slots_per_machine=0
+    )
+    res = Simulator(cluster, FIFOScheduler(cluster), jobs).run(max_events=500_000)
+    finish = [res.completion[j.job_id] for j in jobs]
+    assert finish == sorted(finish)
+
+
+@given(
+    demands=st.dictionaries(
+        st.integers(0, 10),
+        st.tuples(st.floats(0, 50), st.floats(0.1, 4.0)),
+        min_size=1,
+        max_size=8,
+    ),
+    slots=st.floats(0.5, 64.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_max_min_is_feasible_and_exhaustive(demands, slots):
+    alloc = max_min_allocation(demands, slots)
+    total_cap = sum(c for c, _ in demands.values())
+    assert sum(alloc.values()) <= slots + 1e-6
+    # Exhaustive: either all slots used or every job is at its cap.
+    if total_cap >= slots:
+        assert sum(alloc.values()) >= slots - 1e-6
+    for j, a in alloc.items():
+        assert -1e-9 <= a <= demands[j][0] + 1e-6
+
+
+@given(
+    caps=st.lists(st.integers(0, 30), min_size=1, max_size=8),
+    slots=st.integers(0, 64),
+)
+@settings(max_examples=100, deadline=None)
+def test_discrete_allocation_integral(caps, slots):
+    demands = {i: (c, 1.0) for i, c in enumerate(caps)}
+    rank = {i: c for i, c in enumerate(caps)}
+    alloc = discrete_allocation(demands, slots, rank)
+    assert all(isinstance(v, int) for v in alloc.values())
+    assert sum(alloc.values()) <= slots
+    assert sum(alloc.values()) == min(slots, sum(caps))
+    for i, c in enumerate(caps):
+        assert 0 <= alloc[i] <= c
+
+
+@given(jobs=workload(max_jobs=4))
+@settings(max_examples=20, deadline=None)
+def test_hfsp_determinism(jobs):
+    """Same workload twice => identical completions (the scheduler and
+    simulator are deterministic)."""
+    def run():
+        cluster = ClusterSpec(
+            num_machines=2, map_slots_per_machine=2, reduce_slots_per_machine=1
+        )
+        return Simulator(cluster, HFSPScheduler(cluster), jobs).run(max_events=500_000)
+
+    a, b = run(), run()
+    assert a.completion == b.completion

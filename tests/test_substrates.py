@@ -1,0 +1,239 @@
+"""Substrate tests: optimizer, data pipeline, checkpoint store, serving,
+runtime, sharding specs, roofline parsing."""
+
+import math
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.configs import get_smoke
+from repro.configs.base import SHAPES, input_specs
+from repro.data import DataConfig, Prefetcher, SyntheticLM
+from repro.models import init_model
+from repro.serve import greedy_generate
+from repro.train import OptimizerConfig, adamw_update, init_opt_state, lr_at
+from repro.utils.roofline import Roofline, parse_collectives
+
+
+class TestOptimizer:
+    def test_lr_schedule_shape(self):
+        cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                              min_lr_ratio=0.1)
+        assert float(lr_at(cfg, jnp.asarray(0))) == pytest.approx(0.0)
+        assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+        assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)
+
+    def test_adamw_moves_toward_minimum(self):
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        opt = init_opt_state(params)
+        cfg = OptimizerConfig(lr=0.5, warmup_steps=0, weight_decay=0.0,
+                              schedule="constant")
+        for _ in range(120):
+            grads = {"w": params["w"]}  # d/dw (w^2/2)
+            params, opt, _ = adamw_update(cfg, params, grads, opt)
+        assert float(jnp.abs(params["w"]).max()) < 0.3
+
+    def test_grad_clipping(self):
+        from repro.train.optimizer import clip_by_global_norm
+
+        grads = {"a": jnp.full((4,), 100.0)}
+        clipped, norm = clip_by_global_norm(grads, 1.0)
+        assert float(norm) == pytest.approx(200.0)
+        total = jnp.sqrt(jnp.sum(jnp.square(clipped["a"])))
+        assert float(total) == pytest.approx(1.0, rel=1e-4)
+
+    def test_int8_compression_roundtrip(self):
+        from repro.train.optimizer import compress_int8, decompress_int8
+
+        g = jnp.asarray(np.random.default_rng(0).normal(size=(128,)) * 3)
+        q, scale = compress_int8(g)
+        back = decompress_int8(q, scale)
+        assert q.dtype == jnp.int8
+        np.testing.assert_allclose(back, g, atol=float(scale) * 0.51)
+
+
+class TestData:
+    def test_determinism_and_rank_disjointness(self):
+        cfg = get_smoke("olmo_1b")
+        src = SyntheticLM(cfg, DataConfig(seq_len=16, global_batch=8))
+        a = src.batch(3, rank=0, num_ranks=2)
+        b = src.batch(3, rank=0, num_ranks=2)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = src.batch(3, rank=1, num_ranks=2)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = get_smoke("olmo_1b")
+        src = SyntheticLM(cfg, DataConfig(seq_len=16, global_batch=2))
+        b = src.batch(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_prefetcher(self):
+        cfg = get_smoke("olmo_1b")
+        src = SyntheticLM(cfg, DataConfig(seq_len=8, global_batch=2))
+        pf = Prefetcher(src, depth=2)
+        steps = [pf.next()[0] for _ in range(4)]
+        pf.close()
+        assert steps == [0, 1, 2, 3]
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_gc(self):
+        with tempfile.TemporaryDirectory() as d:
+            store = CheckpointStore(d, keep=2)
+            tree = {"a": np.arange(5), "b": {"c": np.ones((2, 2))}}
+            for step in (1, 2, 3):
+                store.save("t", step, tree)
+            files = [f for f in os.listdir(d) if f.endswith(".npz")]
+            assert len(files) == 2  # gc keeps 2
+            step, restored = store.restore("t")
+            assert step == 3
+            np.testing.assert_array_equal(restored["a"], tree["a"])
+            np.testing.assert_array_equal(restored["b"]["c"], tree["b"]["c"])
+
+    def test_async_save(self):
+        with tempfile.TemporaryDirectory() as d:
+            store = CheckpointStore(d)
+            store.save_async("t", 7, {"x": jnp.ones((3,))})
+            store.wait()
+            assert store.restore("t")[0] == 7
+
+    def test_restore_missing_returns_none(self):
+        with tempfile.TemporaryDirectory() as d:
+            assert CheckpointStore(d).restore("nope") is None
+
+
+class TestServe:
+    def test_greedy_generate_deterministic(self):
+        cfg = get_smoke("olmo_1b")
+        params = init_model(cfg, jax.random.PRNGKey(0))
+        prompt = jnp.asarray([[1, 2, 3]], jnp.int32)
+        a = greedy_generate(cfg, params, prompt, max_new_tokens=4)
+        b = greedy_generate(cfg, params, prompt, max_new_tokens=4)
+        assert a.shape == (1, 7)
+        np.testing.assert_array_equal(a, b)
+        assert int(a.max()) < cfg.vocab_size  # padded vocab never sampled
+
+    def test_batching_queue_lifecycle(self):
+        from repro.serve import BatchingQueue
+
+        cfg = get_smoke("olmo_1b")
+        q = BatchingQueue(cfg, batch_slots=2, max_seq=16)
+        for i in range(3):
+            q.submit({"id": i, "prompt": [1, 2], "max_new_tokens": 2})
+        admitted = q.admit()
+        assert len(admitted) == 2  # only 2 slots
+        for slot, _ in admitted:
+            for tok in (5, 6, 7):
+                q.step_done(slot, tok)
+        assert len(q.finished) == 2
+        assert len(q.admit()) == 1  # third request admitted after slots free
+
+
+class TestShardingSpecs:
+    def test_specs_cover_every_leaf(self):
+        from repro.launch.mesh import make_host_mesh
+        from repro.sharding.specs import param_specs
+
+        mesh = make_host_mesh()
+        for arch in ("olmo_1b", "granite_moe_3b", "zamba2_2b7", "whisper_base",
+                     "rwkv6_1b6"):
+            cfg = get_smoke(arch)
+            shapes = jax.eval_shape(
+                lambda c=cfg: init_model(c, jax.random.PRNGKey(0))
+            )
+            specs = param_specs(cfg, mesh, shapes)
+            flat_s = jax.tree.leaves(
+                specs, is_leaf=lambda x: hasattr(x, "_normalized_spec") or
+                type(x).__name__ == "PartitionSpec"
+            )
+            flat_p = jax.tree.leaves(shapes)
+            assert len(flat_s) == len(flat_p)
+            for sp, leaf in zip(flat_s, flat_p):
+                assert len(sp) <= len(leaf.shape)
+
+    def test_input_specs_match_assigned_shapes(self):
+        cfg = get_smoke("olmo_1b")
+        for name, shape in SHAPES.items():
+            specs = input_specs(cfg, shape)
+            if shape.kind == "decode":
+                assert specs["tokens"].shape == (shape.global_batch, 1)
+            else:
+                assert specs["tokens"].shape[0] == shape.global_batch
+
+
+class TestRooflineParsing:
+    HLO = """
+  %ar = f32[8,128]{1,0} all-reduce(%x), channel_id=1, replica_groups=[4,8]<=[32], to_apply=%add
+  %ag = bf16[16,256]{1,0} all-gather(%y), channel_id=2, replica_groups=[8,4]<=[32], dimensions={0}
+  %rs = f32[4,64]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[4,8]<=[32], to_apply=%add
+  %cp = f32[32]{0} collective-permute(%w), channel_id=4, source_target_pairs={{0,1}}
+  %ard = f32[8,128]{1,0} all-reduce-done(%ar)
+"""
+
+    def test_wire_bytes(self):
+        st = parse_collectives(self.HLO)
+        assert st.count_by_op == {
+            "all-reduce": 1, "all-gather": 1, "reduce-scatter": 1,
+            "collective-permute": 1,
+        }
+        z_ar = 8 * 128 * 4
+        assert st.bytes_by_op["all-reduce"] == pytest.approx(
+            2 * z_ar * 7 / 8
+        )
+        z_ag = 16 * 256 * 2
+        assert st.bytes_by_op["all-gather"] == pytest.approx(z_ag * 3 / 4)
+        z_rs = 4 * 64 * 4
+        assert st.bytes_by_op["reduce-scatter"] == pytest.approx(z_rs * 7)
+
+    def test_dominant_term(self):
+        r = Roofline(flops=197e12, bytes_accessed=1.0, collective_bytes=1.0)
+        assert r.dominant == "compute"
+        assert r.compute_s == pytest.approx(1.0)
+
+
+class TestGangRuntime:
+    def test_two_jobs_hfsp(self):
+        from repro.core import ClusterSpec, HFSPConfig, HFSPScheduler
+        from repro.runtime import GangRuntime, MLJob
+
+        cluster = ClusterSpec(num_machines=1, map_slots_per_machine=1,
+                              reduce_slots_per_machine=0)
+        jobs = [
+            MLJob(0, get_smoke("olmo_1b"), total_steps=4, steps_per_quantum=2,
+                  arrival_time=0.0, name="a"),
+            MLJob(1, get_smoke("olmo_1b"), total_steps=2, steps_per_quantum=2,
+                  arrival_time=0.1, name="b", seed=1),
+        ]
+        with tempfile.TemporaryDirectory() as d:
+            rtm = GangRuntime(
+                cluster,
+                HFSPScheduler(cluster, HFSPConfig(sample_set_size=1)),
+                jobs, CheckpointStore(d),
+            )
+            rep = rtm.run(max_wall_s=300)
+        assert len(rep["sojourn"]) == 2
+        assert all(v is not None for v in rep["losses"].values())
+
+    def test_failure_recovery(self):
+        from repro.core import ClusterSpec, FIFOScheduler
+        from repro.runtime import GangRuntime, MLJob
+
+        cluster = ClusterSpec(num_machines=1, map_slots_per_machine=1,
+                              reduce_slots_per_machine=0)
+        jobs = [MLJob(0, get_smoke("olmo_1b"), total_steps=6,
+                      steps_per_quantum=2, arrival_time=0.0, name="flaky")]
+        with tempfile.TemporaryDirectory() as d:
+            # seed 2: rng draws 0.262, 0.298 < 0.4 => the first two quanta
+            # fail deterministically, then recovery completes the job.
+            rtm = GangRuntime(cluster, FIFOScheduler(cluster), jobs,
+                              CheckpointStore(d), fail_quantum_prob=0.4,
+                              rng_seed=2)
+            rep = rtm.run(max_wall_s=300)
+        assert 0 in rep["sojourn"]          # completed despite failures
+        assert rep["stats"]["failures"] >= 1
