@@ -1,0 +1,158 @@
+"""Scheduler-overhead benchmark: decision latency and event throughput vs
+cluster scale.
+
+The paper's practicality claim (Sect. 4) rests on the scheduler's own
+decision cost staying negligible as jobs x machines grow.  This bench
+drives each scheduler through the trace-scale FB workload
+(:func:`repro.workload.fb_scaled_dataset`) over a #jobs x #machines grid
+and reports, per cell:
+
+* **decision latency** — mean and p99 wall-clock of one ``schedule()``
+  pass (the incremental engine targets O(changed-tasks + actions));
+* **events/sec** — simulator events processed per wall-clock second;
+* **passes** and **events** actually executed (each cell runs a bounded
+  event budget so the big cells stay fast; the workload is oversized
+  relative to the budget, so every cell measures the scheduler under
+  full queue pressure, not the drain tail).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_sched_overhead \
+      [--schedulers hfsp,fair,fifo] [--jobs 50,500,5000] \
+      [--machines 20,200,1000] [--events 20000] [--seed 0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import SCHEDULERS, CsvOut
+from repro.core import Simulator
+from repro.core.simulator import EventLimitReached
+from repro.core.types import ClusterSpec
+from repro.workload import fb_scaled_dataset
+
+JOB_GRID = (50, 500, 5000)
+MACHINE_GRID = (20, 200, 1000)
+
+
+class _TimedScheduler:
+    """Wraps a scheduler, timing every schedule() pass."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.pass_times: list[float] = []
+
+    def schedule(self, view, now):
+        t0 = time.perf_counter()
+        actions = self._inner.schedule(view, now)
+        self.pass_times.append(time.perf_counter() - t0)
+        return actions
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def run_cell(
+    sched_name: str,
+    num_jobs: int,
+    num_machines: int,
+    *,
+    seed: int = 0,
+    max_events: int = 20_000,
+    max_seconds: float = 45.0,
+    chunk: int = 250,
+) -> dict:
+    """One (scheduler, #jobs, #machines) cell.
+
+    Bounded two ways so pathological cells (e.g. 5000 jobs jammed onto 20
+    machines) cannot stall the grid: an event budget AND a wall-clock cap.
+    The simulator supports incremental continuation, so the cell runs in
+    ``chunk``-event slices and stops at whichever bound hits first; the
+    row reports the events actually processed (no silent truncation).
+    """
+    jobs, _ = fb_scaled_dataset(
+        seed=seed, num_jobs=num_jobs, num_machines=num_machines
+    )
+    cluster = ClusterSpec(
+        num_machines=num_machines,
+        map_slots_per_machine=4,
+        reduce_slots_per_machine=2,
+    )
+    sch = _TimedScheduler(SCHEDULERS[sched_name](cluster))
+    sim = Simulator(cluster, sch, jobs)
+    t0 = time.perf_counter()
+    while (
+        sim.events_processed < max_events
+        and time.perf_counter() - t0 < max_seconds
+    ):
+        try:
+            sim.run(max_events=min(chunk, max_events - sim.events_processed))
+            break  # drained the whole workload inside the budget
+        except EventLimitReached:
+            continue  # slice exhausted; loop re-checks both bounds
+    wall = time.perf_counter() - t0
+    events = sim.events_processed
+    times = sorted(sch.pass_times)
+    n = len(times)
+    mean_ms = 1e3 * sum(times) / n if n else 0.0
+    p99_ms = 1e3 * times[min(n - 1, int(0.99 * n))] if n else 0.0
+    return {
+        "passes": n,
+        "events": events,
+        "sim_t": sim._now,
+        "wall_s": wall,
+        "mean_pass_ms": mean_ms,
+        "p99_pass_ms": p99_ms,
+        "events_per_s": events / wall if wall > 0 else 0.0,
+        "sched_frac": sum(times) / wall if wall > 0 else 0.0,
+    }
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--schedulers", default="fifo,fair,hfsp")
+    ap.add_argument("--jobs", default=",".join(map(str, JOB_GRID)))
+    ap.add_argument("--machines", default=",".join(map(str, MACHINE_GRID)))
+    ap.add_argument("--events", type=int, default=20_000,
+                    help="event budget per cell")
+    ap.add_argument("--max-cell-seconds", type=float, default=45.0,
+                    help="wall-clock cap per cell")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    out = CsvOut(
+        "sched_overhead",
+        ["scheduler", "jobs", "machines", "passes", "events", "sim_t",
+         "wall_s", "mean_pass_ms", "p99_pass_ms", "events_per_s",
+         "sched_frac"],
+    )
+    for name in args.schedulers.split(","):
+        for nj in (int(x) for x in args.jobs.split(",")):
+            for nm in (int(x) for x in args.machines.split(",")):
+                cell = run_cell(
+                    name, nj, nm, seed=args.seed, max_events=args.events,
+                    max_seconds=args.max_cell_seconds,
+                )
+                out.add(
+                    name, nj, nm, cell["passes"], cell["events"],
+                    round(cell["sim_t"], 1),
+                    round(cell["wall_s"], 3),
+                    round(cell["mean_pass_ms"], 4),
+                    round(cell["p99_pass_ms"], 4),
+                    round(cell["events_per_s"], 1),
+                    round(cell["sched_frac"], 3),
+                )
+                print(
+                    f"# {name} jobs={nj} machines={nm}: "
+                    f"{cell['wall_s']:.2f}s wall, "
+                    f"{cell['mean_pass_ms']:.3f}ms/pass (p99 "
+                    f"{cell['p99_pass_ms']:.3f}), "
+                    f"{cell['events_per_s']:.0f} events/s",
+                    flush=True,
+                )
+    out.emit()
+
+
+if __name__ == "__main__":
+    main()

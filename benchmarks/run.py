@@ -1,12 +1,21 @@
 """Benchmark driver: one benchmark per paper table/figure + the
-beyond-paper ML-workload and kernel/roofline benches.  Emits CSV blocks.
+beyond-paper ML-workload, kernel/roofline, and scheduler-overhead benches.
+Emits CSV blocks.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig3,fig7] [--fast]
+  PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_sched.json
+
+``--quick`` runs only the scheduler wall-clock smoke bench (one FB run per
+scheduler) — the one-command perf gate used by scripts/check.sh.  With
+``--json PATH`` the per-scheduler wall-clock (and result fingerprints) are
+also written to ``PATH`` so successive PRs accumulate a perf trajectory.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 import traceback
@@ -20,6 +29,7 @@ from benchmarks import (
     bench_per_job_delta,
     bench_preemption,
     bench_roofline,
+    bench_sched_overhead,
     bench_sojourn,
 )
 
@@ -33,16 +43,62 @@ BENCHES = {
     "ml": bench_ml_workload.main,
     "kernels": bench_kernels.main,
     "roofline": bench_roofline.main,
+    "sched_overhead": bench_sched_overhead.main,
 }
 
-FAST_SKIP = {"fig5", "fig6", "ml"}  # the long ones
+FAST_SKIP = {"fig5", "fig6", "ml", "sched_overhead"}  # the long ones
+
+QUICK_SCHEDULERS = ("fifo", "fair", "hfsp")
+
+
+def quick_sched_wall(json_path: str | None = None, seed: int = 0) -> dict:
+    """Wall-clock one FB run per scheduler; optionally dump JSON.
+
+    The JSON records, per scheduler: wall-clock seconds, mean sojourn, and
+    a completion fingerprint (so a perf regression AND a behaviour change
+    are both visible in the trajectory file).
+    """
+    from benchmarks.common import CsvOut, run_fb
+
+    out = CsvOut("sched_wall", ["scheduler", "wall_s", "mean_sojourn_s",
+                                "completion_fingerprint"])
+    record: dict = {
+        "bench": "sched_wall",
+        "seed": seed,
+        "python": platform.python_version(),
+        "schedulers": {},
+    }
+    for name in QUICK_SCHEDULERS:
+        res, _, _, wall = run_fb(name, seed=seed)
+        fingerprint = hash(tuple(sorted(res.completion.items())))
+        out.add(name, round(wall, 3), round(res.mean_sojourn(), 2), fingerprint)
+        record["schedulers"][name] = {
+            "wall_s": round(wall, 3),
+            "mean_sojourn_s": round(res.mean_sojourn(), 2),
+            "completion_fingerprint": fingerprint,
+        }
+        print(f"# {name}: {wall:.2f}s wall", flush=True)
+    out.emit()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
+    return record
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated subset")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="scheduler wall-clock smoke bench only")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="with --quick: dump per-scheduler wall-clock JSON")
     args = ap.parse_args()
+
+    if args.quick:
+        quick_sched_wall(json_path=args.json)
+        return
 
     names = list(BENCHES)
     if args.only:

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# One-command gate: tier-1 tests + the quick scheduler benchmark.
+#
+#   scripts/check.sh            # tests + quick bench, JSON to BENCH_sched.json
+#   scripts/check.sh --no-bench # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+  echo
+  echo "== quick scheduler benchmark =="
+  python -m benchmarks.run --quick --json BENCH_sched.json
+fi

@@ -188,6 +188,10 @@ class TrainingModule:
     estimator: TaskTimeEstimator = field(default_factory=FirstOrderEstimator)
     recent: RecentTaskStats = field(default_factory=RecentTaskStats)
     _training: dict[tuple[int, Phase], _PhaseTraining] = field(default_factory=dict)
+    # Insertion-ordered index of (job, phase) pairs still training — lets
+    # the scheduler iterate only in-training jobs instead of probing every
+    # live job each pass.  Entries leave when training finalizes.
+    _active: dict[tuple[int, Phase], None] = field(default_factory=dict)
 
     # -- lifecycle -----------------------------------------------------------
     def start_phase(self, job: JobState, phase: Phase) -> float:
@@ -203,6 +207,8 @@ class TrainingModule:
             st.done = True
         self._training[(job.spec.job_id, phase)] = st
         job.in_training[phase] = not st.done
+        if not st.done:
+            self._active[(job.spec.job_id, phase)] = None
         if not tasks:
             return 0.0
         if math.isinf(self.xi):
@@ -210,8 +216,11 @@ class TrainingModule:
         return len(tasks) * self.recent.mean(phase) * self.xi
 
     def is_training(self, job_id: int, phase: Phase) -> bool:
-        st = self._training.get((job_id, phase))
-        return st is not None and not st.done
+        return (job_id, phase) in self._active
+
+    def active_jobs(self, phase: Phase) -> list[int]:
+        """Job ids still training this phase, in training-start order."""
+        return [j for (j, p) in self._active if p is phase]
 
     def sample_keys(self, job_id: int, phase: Phase) -> list[tuple]:
         st = self._training.get((job_id, phase))
@@ -277,6 +286,7 @@ class TrainingModule:
         if len(st.observed) >= n_needed:
             st.done = True
             job.in_training[phase] = False
+            self._active.pop((job.spec.job_id, phase), None)
         vec = self.estimator.fit_vector(
             list(st.observed.values()), len(job.spec.tasks(phase))
         )

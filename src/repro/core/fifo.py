@@ -25,6 +25,8 @@ class FIFOScheduler(Scheduler):
         self._begin_pass()
         actions: list[Action] = []
         for phase in (Phase.MAP, Phase.REDUCE):
+            if self.config.paranoid_indexes:
+                self._paranoid_check(view, phase)
             free = view.free_slots(phase)
             if not free:
                 continue

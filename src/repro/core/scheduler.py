@@ -17,6 +17,36 @@ in :class:`~repro.core.types.JobState`.
 Every helper here is written to be cheap per scheduling pass: O(free slots
 + live jobs + emitted actions), never O(total tasks) — schedulers run on
 every simulator event.
+
+Incremental run-state engine
+----------------------------
+The base scheduler maintains live indexes of the cluster's RUNNING tasks —
+``_slot_of`` (task key -> slot), ``_run_by_job`` ((job, phase) -> attempts)
+and ``_run_by_machine`` ((machine, phase) -> attempts) — updated in O(1)
+per event instead of being rebuilt from ``view.occupied_slots`` on every
+scheduling pass.  Executors MUST report every applied action through the
+``on_task_started`` / ``on_task_resumed`` / ``on_task_suspended`` /
+``on_task_killed`` hooks (completions already flow through
+``on_task_complete``).  Both bundled executors do.  The hooks are a hard
+requirement for correctness: the cheap per-pass fallback
+(`_maybe_resync_indexes`) only catches drift that changes the running-task
+COUNT, so an executor that skips the hooks but happens to keep counts
+balanced (e.g. applying a Suspend + Resume pair) runs on stale indexes
+undetected.  Validate new executors with
+``SchedulerConfig.paranoid_indexes``, which cross-checks content and order
+every pass.
+
+Index invariants (checked every pass under
+``SchedulerConfig.paranoid_indexes``):
+
+* the indexes contain exactly the RUNNING tasks, keyed consistently with
+  the executor's occupied-slot map;
+* within one (machine, phase) or (job, phase) bucket, insertion order
+  equals the executor's slot-occupancy insertion order — preemption
+  victim selection is order-sensitive, so this keeps incremental and
+  rebuild-from-scratch schedules bit-identical;
+* indexes never change during a pass (the executor applies actions only
+  after ``schedule()`` returns), so a pass sees a consistent snapshot.
 """
 
 from __future__ import annotations
@@ -90,6 +120,10 @@ class SchedulerConfig:
     # opportunities a job may skip waiting for a data-local MAP slot.
     locality_max_skips: int = 3
     locality_enabled: bool = True
+    # Debug mode: rebuild the run-state indexes from the view on every pass
+    # and assert they match the incrementally-maintained ones.  Slow; used
+    # by the equivalence tests.
+    paranoid_indexes: bool = False
 
 
 class Scheduler(abc.ABC):
@@ -111,10 +145,39 @@ class Scheduler(abc.ABC):
         # has not applied the actions yet, so JobState still shows them as
         # PENDING/SUSPENDED — helpers must not hand them out twice).
         self._claimed: set[tuple] = set()
+        # Per-(job, phase) count of claims that targeted PENDING tasks,
+        # kept alongside _claimed so _unclaimed_pending is O(1) instead of
+        # O(#claimed) per queried job.
+        self._claimed_pending: dict[tuple[int, str], int] = {}
+        # -- incremental run-state engine (see module docstring) ------------
+        # Live views of RUNNING tasks, updated in O(1) by the executor
+        # hooks below; read by preemption logic instead of rebuilding from
+        # view.occupied_slots() every pass.
+        self._slot_of: dict[tuple, SlotKey] = {}
+        self._run_by_job: dict[tuple[int, str], dict[tuple, TaskAttempt]] = {}
+        self._run_by_machine: dict[tuple[int, str], dict[tuple, TaskAttempt]] = {}
+        self._n_running_idx: dict[str, int] = {
+            Phase.MAP.value: 0, Phase.REDUCE.value: 0,
+        }
+        # Jobs with at least one RUNNING task, per phase — lets preemption
+        # victim collection iterate O(running jobs) instead of O(live jobs).
+        self._jobs_running: dict[str, set[int]] = {
+            Phase.MAP.value: set(), Phase.REDUCE.value: set(),
+        }
 
     def _begin_pass(self) -> None:
         self._claimed.clear()
+        self._claimed_pending.clear()
         self._pass_seq += 1
+
+    def _claim(self, att: TaskAttempt) -> None:
+        """Mark a task as acted on this pass.  All claims must go through
+        here so the per-(job, phase) pending-claim counters stay exact."""
+        key = att.spec.key
+        self._claimed.add(key)
+        if att.state is TaskState.PENDING:
+            jk = (key[0], key[1])
+            self._claimed_pending[jk] = self._claimed_pending.get(jk, 0) + 1
 
     # -- events (executor -> scheduler) -------------------------------------
     def on_job_arrival(self, spec: JobSpec, now: float) -> JobState:
@@ -124,7 +187,7 @@ class Scheduler(abc.ABC):
         return js
 
     def on_task_complete(self, job_id: int, key: tuple, now: float) -> None:
-        pass
+        self._index_remove(key)
 
     def on_task_progress(
         self, job_id: int, key: tuple, fraction: float, elapsed: float, now: float
@@ -133,9 +196,111 @@ class Scheduler(abc.ABC):
 
     def on_job_complete(self, job_id: int, now: float) -> None:
         self._live.pop(job_id, None)
+        # Prune the (empty-by-now) per-job run buckets.
+        self._run_by_job.pop((job_id, Phase.MAP.value), None)
+        self._run_by_job.pop((job_id, Phase.REDUCE.value), None)
 
     def on_tick(self, now: float) -> None:
         """Periodic heartbeat (executors call this every few sim-seconds)."""
+
+    # -- run-state engine hooks (executor -> scheduler) ----------------------
+    # Executors call these right after physically applying each action so
+    # the indexes mirror the cluster without per-pass rebuilds.
+    def on_task_started(self, att: TaskAttempt, slot: SlotKey) -> None:
+        self._index_add(att, slot)
+
+    def on_task_resumed(self, att: TaskAttempt, slot: SlotKey) -> None:
+        self._index_add(att, slot)
+
+    def on_task_suspended(self, att: TaskAttempt) -> None:
+        self._index_remove(att.spec.key)
+
+    def on_task_killed(self, att: TaskAttempt) -> None:
+        self._index_remove(att.spec.key)
+
+    def _index_add(self, att: TaskAttempt, slot: SlotKey) -> None:
+        key = att.spec.key
+        pv = slot.phase.value
+        self._slot_of[key] = slot
+        jk = (att.spec.job_id, pv)
+        bucket = self._run_by_job.get(jk)
+        if bucket is None:
+            bucket = self._run_by_job[jk] = {}
+        if not bucket:
+            self._jobs_running[pv].add(att.spec.job_id)
+        bucket[key] = att
+        mk = (slot.machine, pv)
+        bucket = self._run_by_machine.get(mk)
+        if bucket is None:
+            bucket = self._run_by_machine[mk] = {}
+        bucket[key] = att
+        self._n_running_idx[pv] += 1
+
+    def _index_remove(self, key: tuple) -> None:
+        slot = self._slot_of.pop(key, None)
+        if slot is None:
+            return
+        pv = slot.phase.value
+        bucket = self._run_by_job[(key[0], pv)]
+        bucket.pop(key, None)
+        if not bucket:
+            self._jobs_running[pv].discard(key[0])
+        self._run_by_machine[(slot.machine, pv)].pop(key, None)
+        self._n_running_idx[pv] -= 1
+
+    def _maybe_resync_indexes(self, view: ClusterView, phase: Phase) -> None:
+        """Fallback for executors that do not call the run-state hooks:
+        when the indexed running count disagrees with the view, rebuild
+        this phase's indexes from scratch (the legacy per-pass path)."""
+        occ = view.occupied_slots(phase)
+        if self._n_running_idx[phase.value] == len(occ):
+            return
+        pv = phase.value
+        for key in [k for k, s in self._slot_of.items() if s.phase is phase]:
+            del self._slot_of[key]
+        for mk in [k for k in self._run_by_machine if k[1] == pv]:
+            del self._run_by_machine[mk]
+        for jk in [k for k in self._run_by_job if k[1] == pv]:
+            del self._run_by_job[jk]
+        self._n_running_idx[pv] = 0
+        self._jobs_running[pv].clear()
+        for slot, att in occ.items():
+            self._index_add(att, slot)
+
+    def _paranoid_check(self, view: ClusterView, phase: Phase) -> None:
+        """Rebuild reference indexes from the view and assert the
+        incremental ones match — content AND per-bucket order (preemption
+        victim selection is order-sensitive)."""
+        pv = phase.value
+        ref_slot_of: dict[tuple, SlotKey] = {}
+        ref_by_machine: dict[int, list[tuple]] = {}
+        ref_by_job: dict[int, list[tuple]] = {}
+        for slot, att in view.occupied_slots(phase).items():
+            ref_slot_of[att.spec.key] = slot
+            ref_by_machine.setdefault(slot.machine, []).append(att.spec.key)
+            ref_by_job.setdefault(att.spec.job_id, []).append(att.spec.key)
+        got_slot_of = {k: s for k, s in self._slot_of.items() if s.phase is phase}
+        assert got_slot_of == ref_slot_of, (
+            f"slot_of mismatch ({phase}): {got_slot_of} != {ref_slot_of}"
+        )
+        got_by_machine = {
+            mk[0]: list(bucket)
+            for mk, bucket in self._run_by_machine.items()
+            if mk[1] == pv and bucket
+        }
+        assert got_by_machine == ref_by_machine, (
+            f"run_by_machine mismatch ({phase})"
+        )
+        got_by_job = {
+            jk[0]: list(bucket)
+            for jk, bucket in self._run_by_job.items()
+            if jk[1] == pv and bucket
+        }
+        assert got_by_job == ref_by_job, f"run_by_job mismatch ({phase})"
+        assert self._n_running_idx[pv] == len(ref_slot_of)
+        assert self._jobs_running[pv] == set(ref_by_job), (
+            f"jobs_running mismatch ({phase})"
+        )
 
     # -- decisions -----------------------------------------------------------
     @abc.abstractmethod
@@ -157,20 +322,14 @@ class Scheduler(abc.ABC):
         return js.n_pending(phase) + js.n_suspended(phase) + js.n_running(phase)
 
     def _unclaimed_pending(self, js: JobState, phase: Phase) -> int:
-        """Pending tasks not yet claimed this pass (exact when the claimed
-        set is small, which it is — it only holds this pass's actions)."""
-        n = js.n_pending(phase)
-        if not self._claimed:
-            return n
-        jid = js.spec.job_id
-        claimed_here = sum(
-            1
-            for k in self._claimed
-            if k[0] == jid
-            and k[1] == phase.value
-            and js.tasks[k].state is TaskState.PENDING
+        """Pending tasks not yet claimed this pass.  O(1): `_claim` counts
+        claims of PENDING tasks per (job, phase) as they happen (task
+        states cannot change mid-pass, so the counter is exact)."""
+        if not self._claimed_pending:
+            return js.n_pending(phase)
+        return js.n_pending(phase) - self._claimed_pending.get(
+            (js.spec.job_id, phase.value), 0
         )
-        return n - claimed_here
 
     # .. locality-aware assignment of pending tasks to free slots ...........
     def _assign_pending(
@@ -214,7 +373,7 @@ class Scheduler(abc.ABC):
                     None,
                 )
                 if att is not None:
-                    self._claimed.add(att.spec.key)
+                    self._claim(att)
                     actions.append(Start(att, slot, local=True))
                     js.locality_hits += 1
                     budget -= 1
@@ -223,19 +382,32 @@ class Scheduler(abc.ABC):
                     rest_slots.append(slot)
             free = rest_slots
             if budget > 0 and free:
-                remaining = [a for a in js.iter_pending(phase) if eligible(a)]
+                # Bounded scan: at most ``budget`` tasks can be assigned
+                # from either group, so stop once both are full — O(budget)
+                # per pass instead of O(pending) for wide jobs.
+                no_host: list[TaskAttempt] = []
+                remaining: list[TaskAttempt] = []
+                for a in js.iter_pending(phase):
+                    if not eligible(a):
+                        continue
+                    if a.spec.input_hosts:
+                        if len(remaining) < budget:
+                            remaining.append(a)
+                    elif len(no_host) < budget:
+                        no_host.append(a)
+                    if len(remaining) >= budget and len(no_host) >= budget:
+                        break
                 # Tasks with no locality information cannot benefit from
                 # waiting — assign them immediately (ML step quanta, or
                 # jobs whose replicas are all dead).
                 free = list(free)
-                for att in [a for a in remaining if not a.spec.input_hosts]:
+                for att in no_host:
                     if budget <= 0 or not free:
                         break
                     slot = free.pop(0)
-                    self._claimed.add(att.spec.key)
+                    self._claim(att)
                     actions.append(Start(att, slot, local=True))
                     budget -= 1
-                remaining = [a for a in remaining if a.spec.input_hosts]
                 if remaining and budget > 0 and free:
                     skips = self._skip_counts.get(jid, 0)
                     if skips < self.config.locality_max_skips:
@@ -251,7 +423,7 @@ class Scheduler(abc.ABC):
                         while remaining and budget > 0 and free:
                             att = remaining.pop(0)
                             slot = free.pop(0)
-                            self._claimed.add(att.spec.key)
+                            self._claim(att)
                             actions.append(Start(att, slot, local=False))
                             js.locality_misses += 1
                             budget -= 1
@@ -265,7 +437,7 @@ class Scheduler(abc.ABC):
                 if not eligible(att):
                     continue
                 slot = free.pop(0)
-                self._claimed.add(att.spec.key)
+                self._claim(att)
                 actions.append(Start(att, slot, local=True))
                 budget -= 1
         return actions, free
@@ -293,7 +465,7 @@ class Scheduler(abc.ABC):
             slots = free_by_machine.get(att.machine if att.machine is not None else -1)
             if slots:
                 slot = slots.pop(0)
-                self._claimed.add(att.spec.key)
+                self._claim(att)
                 actions.append(Resume(att, slot))
                 budget -= 1
         used = {a.slot for a in actions if isinstance(a, Resume)}

@@ -43,6 +43,16 @@ from repro.core.types import (
 _ARRIVAL, _COMPLETE, _PROGRESS, _TICK = 0, 1, 2, 3
 
 
+class EventLimitReached(RuntimeError):
+    """run(max_events=N) processed N events without draining the heap.
+
+    Subclasses RuntimeError for backward compatibility with callers that
+    use max_events as a livelock guard; callers that use it as a
+    deliberate slicing budget (the scheduler-overhead benchmarks) catch
+    this type specifically so a genuine error can't masquerade as an
+    exhausted budget."""
+
+
 @dataclass
 class SimResult:
     """Everything the benchmarks need."""
@@ -103,13 +113,17 @@ class Simulator:
         self._heap: list[tuple[float, int, int, object]] = []
         self._seq = itertools.count()
         self._now = 0.0
-        # Physical slot state.
-        self._free: dict[Phase, list[SlotKey]] = {Phase.MAP: [], Phase.REDUCE: []}
+        # Physical slot state.  Free slots are insertion-ordered dicts:
+        # same iteration/removal order as a list, but O(1) release/claim
+        # (the scheduler pass consults free_slots on every event).
+        self._free: dict[Phase, dict[SlotKey, None]] = {
+            Phase.MAP: {}, Phase.REDUCE: {},
+        }
         for m in range(cluster.num_machines):
             for i in range(cluster.map_slots_per_machine):
-                self._free[Phase.MAP].append(SlotKey(m, Phase.MAP, i))
+                self._free[Phase.MAP][SlotKey(m, Phase.MAP, i)] = None
             for i in range(cluster.reduce_slots_per_machine):
-                self._free[Phase.REDUCE].append(SlotKey(m, Phase.REDUCE, i))
+                self._free[Phase.REDUCE][SlotKey(m, Phase.REDUCE, i)] = None
         self._occupied: dict[SlotKey, TaskAttempt] = {}
         self._occupied_by_phase: dict[Phase, dict[SlotKey, TaskAttempt]] = {
             Phase.MAP: {}, Phase.REDUCE: {},
@@ -122,6 +136,9 @@ class Simulator:
         self._susp_total = 0
         self._tick_pending = False
         self.result = SimResult()
+        # Total events processed across all (possibly incremental) run()
+        # calls — consumed by the scheduler-overhead benchmarks.
+        self.events_processed = 0
 
     # ------------------------------------------------------------------
     # ClusterView protocol
@@ -167,7 +184,7 @@ class Simulator:
             att, slot = action.attempt, action.slot
             assert att.state is TaskState.PENDING, (att.spec.key, att.state)
             assert slot in self._free[slot.phase], slot
-            self._free[slot.phase].remove(slot)
+            del self._free[slot.phase][slot]
             js = self._job_state(att.spec.job_id)
             js.transition(att, TaskState.RUNNING)
             att.machine = slot.machine
@@ -186,12 +203,13 @@ class Simulator:
                 and att.remaining > self.progress_delta
             ):
                 self._push(now + self.progress_delta, _PROGRESS, (att, ep))
+            self.scheduler.on_task_started(att, slot)
         elif isinstance(action, Resume):
             att, slot = action.attempt, action.slot
             assert att.state is TaskState.SUSPENDED, (att.spec.key, att.state)
             assert att.machine == slot.machine, "resume must be local (Sect 3.3)"
             assert slot in self._free[slot.phase], slot
-            self._free[slot.phase].remove(slot)
+            del self._free[slot.phase][slot]
             # Swap-in cost: roll back progress by the DMA latency.
             cost = self.spec.suspend_cost(att.spec.state_bytes)
             att.progress = max(0.0, att.progress - cost)
@@ -210,13 +228,14 @@ class Simulator:
             self._susp_total -= att.spec.state_bytes
             ep = self._bump(att.spec.key)
             self._push(now + att.remaining, _COMPLETE, (att, ep))
+            self.scheduler.on_task_resumed(att, slot)
         elif isinstance(action, Suspend):
             att = action.attempt
             assert att.state is TaskState.RUNNING, (att.spec.key, att.state)
             slot = self._slot_by_task.pop(att.spec.key)
             del self._occupied[slot]
             del self._occupied_by_phase[slot.phase][slot]
-            self._free[slot.phase].append(slot)
+            self._free[slot.phase][slot] = None
             att.progress = min(
                 att.spec.duration, att.progress + (now - att.started_at)
             )
@@ -227,18 +246,20 @@ class Simulator:
             self._susp_bytes[m] = self._susp_bytes.get(m, 0) + att.spec.state_bytes
             self._susp_count[m] = self._susp_count.get(m, 0) + 1
             self._susp_total += att.spec.state_bytes
+            self.scheduler.on_task_suspended(att)
         elif isinstance(action, Kill):
             att = action.attempt
             assert att.state is TaskState.RUNNING, (att.spec.key, att.state)
             slot = self._slot_by_task.pop(att.spec.key)
             del self._occupied[slot]
             del self._occupied_by_phase[slot.phase][slot]
-            self._free[slot.phase].append(slot)
+            self._free[slot.phase][slot] = None
             att.progress = 0.0
             self._job_state(att.spec.job_id).transition(att, TaskState.PENDING)
             att.machine = None
             att.started_at = None
             self._bump(att.spec.key)
+            self.scheduler.on_task_killed(att)
         else:  # pragma: no cover - defensive
             raise TypeError(f"unknown action {action!r}")
 
@@ -261,7 +282,7 @@ class Simulator:
         slot = self._slot_by_task.pop(att.spec.key)
         del self._occupied[slot]
         del self._occupied_by_phase[slot.phase][slot]
-        self._free[slot.phase].append(slot)
+        self._free[slot.phase][slot] = None
         att.progress = att.spec.duration
         self._job_state(att.spec.job_id).transition(att, TaskState.DONE)
         self._bump(att.spec.key)
@@ -314,13 +335,14 @@ class Simulator:
         while self._heap:
             n_events += 1
             if max_events is not None and n_events > max_events:
-                raise RuntimeError(
+                raise EventLimitReached(
                     f"simulator exceeded {max_events} events at t={self._now}"
                     " — scheduler livelock?"
                 )
             if self._heap[0][0] > until:
                 break
             t, kind, _, payload = heapq.heappop(self._heap)
+            self.events_processed += 1
             self._now = max(self._now, t)
             if kind == _ARRIVAL:
                 self._on_arrival(payload)

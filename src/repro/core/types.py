@@ -33,6 +33,11 @@ class Phase(enum.Enum):
     MAP = "map"
     REDUCE = "reduce"
 
+    # Members are singletons: identity hash is consistent with enum
+    # equality and skips Enum.__hash__'s per-call name hashing — Phase
+    # keys index the per-pass bucket dicts on the scheduler hot path.
+    __hash__ = object.__hash__
+
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return self.value
 
@@ -42,6 +47,8 @@ class TaskState(enum.Enum):
     RUNNING = "running"
     SUSPENDED = "suspended"  # EAGER-preempted; state swapped out
     DONE = "done"
+
+    __hash__ = object.__hash__  # see Phase.__hash__
 
 
 class Preemption(enum.Enum):
@@ -114,6 +121,9 @@ class TaskAttempt:
     started_at: float | None = None
     suspended_at: float | None = None
     attempts: int = 0             # bumped on every (re)start, incl. after KILL
+    # Monotone per-job suspension order (assigned by JobState.transition);
+    # lets machine-grouped scans replay the suspension-bucket order exactly.
+    susp_seq: int = 0
 
     @property
     def remaining(self) -> float:
@@ -150,12 +160,19 @@ class JobState:
     _buckets: dict = field(default_factory=dict, repr=False)
     _pending_by_host: dict = field(default_factory=dict, repr=False)
     _done: dict = field(default_factory=dict, repr=False)
+    # SUSPENDED tasks grouped by the machine holding their swapped-out
+    # state: phase -> machine -> {key: attempt}.  Lets the HFSP resume path
+    # visit only machines that can actually act instead of scanning every
+    # suspended task each pass.
+    _suspended_by_machine: dict = field(default_factory=dict, repr=False)
+    _susp_seq: int = field(default=0, repr=False)
 
     def __post_init__(self) -> None:
         for phase in (Phase.MAP, Phase.REDUCE):
             for st in TaskState:
                 self._buckets[(phase, st)] = {}
             self._done[phase] = 0
+            self._suspended_by_machine[phase] = {}
         if not self.tasks:
             for t in itertools.chain(self.spec.map_tasks, self.spec.reduce_tasks):
                 att = TaskAttempt(spec=t)
@@ -174,6 +191,18 @@ class JobState:
         del self._buckets[(phase, old_state)][key]
         self._buckets[(phase, new_state)][key] = att
         att.state = new_state
+        if new_state is TaskState.SUSPENDED:
+            self._susp_seq += 1
+            att.susp_seq = self._susp_seq
+            m = att.machine if att.machine is not None else -1
+            self._suspended_by_machine[phase].setdefault(m, {})[key] = att
+        elif old_state is TaskState.SUSPENDED:
+            m = att.machine if att.machine is not None else -1
+            bucket = self._suspended_by_machine[phase].get(m)
+            if bucket is not None:
+                bucket.pop(key, None)
+                if not bucket:
+                    del self._suspended_by_machine[phase][m]
         if phase is Phase.MAP and att.spec.input_hosts:
             if old_state is TaskState.PENDING:
                 for h in att.spec.input_hosts:
@@ -220,6 +249,12 @@ class JobState:
 
     def suspended(self, phase: Phase) -> list[TaskAttempt]:
         return list(self._buckets[(phase, TaskState.SUSPENDED)].values())
+
+    def suspended_by_machine(self, phase: Phase) -> dict[int, dict]:
+        """SUSPENDED tasks grouped by machine (read-only view).  Within a
+        machine, insertion order equals suspension order; across machines,
+        ``TaskAttempt.susp_seq`` recovers the global suspension order."""
+        return self._suspended_by_machine[phase]
 
     def unfinished(self, phase: Phase) -> list[TaskAttempt]:
         return [a for a in self.attempts(phase) if a.state is not TaskState.DONE]

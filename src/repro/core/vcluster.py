@@ -25,7 +25,16 @@ Performance notes (the scheduler runs on every executor event):
   cached and recomputed only on job add/remove and size re-estimates.
   Cap changes (task completions) can only *accelerate* the affected job's
   PS finish; we accept the momentarily stale order until the next
-  structural event, which in practice arrives within one heartbeat.
+  structural event, which in practice arrives within one heartbeat;
+* **aging is lazy**: ``age(dt)`` appends ``dt`` to a pending queue in O(1)
+  and per-job ``remaining``/``done`` are materialized only when a query or
+  a structural change (add/remove/re-estimate) needs them.  On the steady-
+  state event path — where the schedule-order cache is hot and no
+  estimates change — an event therefore costs O(1) instead of O(jobs).
+  Materialization *replays* the deferred increments one event-dt at a
+  time under the allocation in force at that point (re-checking effective
+  caps after every step, exactly like the old eager loop), so the
+  resulting floating-point state is bit-identical to eager aging.
 """
 
 from __future__ import annotations
@@ -47,6 +56,9 @@ class _VJob:
     size_rank: int = 0        # number of tasks at arrival; round-robin order
     done: float = 0.0         # virtual work already aged away (for estimate updates)
     task_time: float = 1.0    # estimated serialized seconds per task
+    # Owning cluster (lazy aging): public queries materialize deferred
+    # aging first so external readers never observe stale state.
+    owner: "VirtualCluster | None" = field(default=None, repr=False, compare=False)
 
     def effective_cap(self) -> int:
         """Virtual parallelism: the number of *virtual* tasks still
@@ -55,6 +67,13 @@ class _VJob:
         NOT as real tasks complete.  Coupling it to real completions makes
         a focused job's projected PS finish time rise while it runs, which
         flips the schedule order and causes preemption thrash."""
+        if self.owner is not None:
+            self.owner._materialize()
+        return self._ecap()
+
+    def _ecap(self) -> int:
+        """`effective_cap` without the lazy-aging flush (internal use,
+        after the owner has already materialized)."""
         if math.isinf(self.remaining):
             return self.cap
         if self.task_time <= 0:
@@ -113,9 +132,12 @@ def discrete_allocation(
     allocating virtual cluster resources to small jobs (in terms of their
     number of tasks)." (Sect. 3.1)
 
-    Implemented as floor(water-fill) + leftover slots granted one-by-one in
-    small-job-first order among jobs with headroom — equivalent to the
-    round-robin description but O(J log J).
+    Implemented as floor(water-fill) + leftover slots granted in cyclic
+    small-job-first rounds among jobs with headroom.  The leftover pass is
+    vectorized: whole rounds are granted with one clipped-minimum per
+    round-batch, and the final partial round goes one slot each to the
+    first eligible jobs in order — exactly the one-slot-at-a-time
+    round-robin outcome, without the per-slot Python loop.
     """
     ids = sorted(demands, key=lambda j: (size_rank.get(j, 0), j))
     caps = np.array([demands[j][0] for j in ids], dtype=np.float64)
@@ -123,17 +145,26 @@ def discrete_allocation(
     cont = _water_fill(caps, ws, float(slots))
     base = np.minimum(np.floor(cont + 1e-9), caps).astype(np.int64)
     free = int(slots) - int(base.sum())
-    if free > 0:
-        # Leftovers: small-first round-robin over jobs with headroom.
-        headroom = (caps - base).astype(np.int64)
-        while free > 0 and (headroom > 0).any():
-            for i in range(len(ids)):
-                if free <= 0:
-                    break
-                if headroom[i] > 0:
-                    base[i] += 1
-                    headroom[i] -= 1
-                    free -= 1
+    headroom = (caps - base).astype(np.int64)
+    while free > 0:
+        elig = np.flatnonzero(headroom > 0)
+        if elig.size == 0:
+            break
+        if free >= elig.size:
+            # Grant as many whole rounds as currently fit; jobs capping
+            # out release their share to the next while-iteration.
+            cycles = free // elig.size
+            grant = np.minimum(headroom[elig], cycles)
+            base[elig] += grant
+            headroom[elig] -= grant
+            free -= int(grant.sum())
+        else:
+            # Final partial round: first `free` eligible jobs in
+            # small-first order get one slot each.
+            take = elig[:free]
+            base[take] += 1
+            headroom[take] -= 1
+            free = 0
     return {j: int(b) for j, b in zip(ids, base)}
 
 
@@ -172,19 +203,33 @@ def project_finish_times(
     return {j: float(f) for j, f in zip(ids, fin)}
 
 
-@dataclass
 class VirtualCluster:
     """Mirror of the real cluster for one phase (Sect. 3.1)."""
 
-    phase: Phase
-    slots: int
-    jobs: dict[int, _VJob] = field(default_factory=dict)
-    _alloc_cache: dict | None = field(default=None, repr=False)
-    _order_cache: list | None = field(default=None, repr=False)
+    def __init__(self, phase: Phase, slots: int):
+        self.phase = phase
+        self.slots = slots
+        self._jobs: dict[int, _VJob] = {}
+        self._alloc_cache: dict[int, int] | None = None
+        # Allocated (vjob, slots) pairs with slots > 0 — the only jobs
+        # aging touches; rebuilt together with the allocation.
+        self._allocated_cache: list[tuple[_VJob, int]] | None = None
+        self._order_cache: list[int] | None = None
+        # Lazy aging: deferred per-event dt increments, replayed in order
+        # by _materialize() (see module docstring).
+        self._pending_dts: list[float] = []
+
+    @property
+    def jobs(self) -> dict[int, _VJob]:
+        """Live job table.  Materializes deferred aging so callers always
+        see up-to-date ``remaining``/``done``."""
+        self._materialize()
+        return self._jobs
 
     # -- cache control --------------------------------------------------------
     def _invalidate_alloc(self) -> None:
         self._alloc_cache = None
+        self._allocated_cache = None
 
     def _invalidate_order(self) -> None:
         self._order_cache = None
@@ -197,38 +242,43 @@ class VirtualCluster:
         num_tasks: int,
         weight: float = 1.0,
     ) -> None:
+        self._materialize()  # pending aging belongs to the old membership
         tt = est_size / num_tasks if (num_tasks and math.isfinite(est_size)) else 1.0
-        self.jobs[job_id] = _VJob(
+        self._jobs[job_id] = _VJob(
             job_id=job_id,
             remaining=est_size,
             cap=num_tasks,
             weight=weight,
             size_rank=num_tasks,
             task_time=max(tt, 1e-9),
+            owner=self,
         )
         self._invalidate_alloc()
         self._invalidate_order()
 
     def remove_job(self, job_id: int) -> None:
-        if self.jobs.pop(job_id, None) is not None:
+        self._materialize()
+        if self._jobs.pop(job_id, None) is not None:
             self._invalidate_alloc()
             self._invalidate_order()
 
     def __contains__(self, job_id: int) -> bool:
-        return job_id in self.jobs
+        return job_id in self._jobs
 
     # -- estimate updates (Training module, Sect. 3.2) ----------------------
     def set_remaining(self, job_id: int, remaining: float) -> None:
-        if job_id in self.jobs:
-            self.jobs[job_id].remaining = remaining
+        if job_id in self._jobs:
+            self._materialize()
+            self._jobs[job_id].remaining = remaining
             self._invalidate_order()
 
     def set_size(self, job_id: int, size: float) -> None:
         """Re-estimate total size: 'the job scheduler *updates* the remaining
         amount of work to be done for the job' (Sect. 3.1.1) — the virtual
         work already done is preserved."""
-        if job_id in self.jobs:
-            v = self.jobs[job_id]
+        if job_id in self._jobs:
+            self._materialize()  # bring `done` up to date first
+            v = self._jobs[job_id]
             v.remaining = max(0.0, size - v.done)
             if v.cap and math.isfinite(size):
                 v.task_time = max(size / v.cap, 1e-9)
@@ -236,31 +286,48 @@ class VirtualCluster:
             self._invalidate_order()
 
     def set_cap(self, job_id: int, cap: int) -> None:
-        if job_id in self.jobs and self.jobs[job_id].cap != cap:
-            self.jobs[job_id].cap = cap
+        if job_id in self._jobs and self._jobs[job_id].cap != cap:
+            self._materialize()
+            self._jobs[job_id].cap = cap
             self._invalidate_alloc()
             # Order kept: a cap drop only accelerates this job's PS finish
             # (see module docstring); next structural event refreshes it.
 
     def remaining(self, job_id: int) -> float:
-        return self.jobs[job_id].remaining if job_id in self.jobs else 0.0
+        self._materialize()
+        return self._jobs[job_id].remaining if job_id in self._jobs else 0.0
 
     # -- aging (Sect. 3.1, "Job aging") --------------------------------------
     def age(self, dt: float) -> None:
-        """Distribute ``dt`` of progress to every allocated virtual task."""
-        if dt <= 0 or not self.jobs:
+        """Distribute ``dt`` of progress to every allocated virtual task.
+
+        O(1): the increment is queued and replayed by the next query or
+        structural change."""
+        if dt <= 0 or not self._jobs:
             return
-        alloc = self.allocation()
+        self._pending_dts.append(dt)
+
+    def _materialize(self) -> None:
+        """Replay deferred aging increments, one event-dt at a time.
+
+        Each step uses the allocation in force at that step and re-checks
+        effective caps afterwards (a shrinking virtual tail redistributes
+        slots), reproducing eager per-event aging bit for bit."""
+        if not self._pending_dts:
+            return
+        pending, self._pending_dts = self._pending_dts, []
+        for dt in pending:
+            self._age_step(dt)
+
+    def _age_step(self, dt: float) -> None:
         cap_changed = False
-        for j, vjob in self.jobs.items():
-            a = alloc.get(j, 0)
-            if a > 0:
-                before = vjob.effective_cap()
-                vjob.done += a * dt
-                if not math.isinf(vjob.remaining):
-                    vjob.remaining = max(0.0, vjob.remaining - a * dt)
-                if vjob.effective_cap() != before:
-                    cap_changed = True
+        for vjob, a in self._allocated():
+            before = vjob._ecap()
+            vjob.done += a * dt
+            if not math.isinf(vjob.remaining):
+                vjob.remaining = max(0.0, vjob.remaining - a * dt)
+            if vjob._ecap() != before:
+                cap_changed = True
         if cap_changed:
             # A virtual tail shrank below its allocation: redistribute.
             self._invalidate_alloc()
@@ -268,31 +335,48 @@ class VirtualCluster:
         # invariance): the order cache stays valid.
 
     # -- queries --------------------------------------------------------------
-    def allocation(self) -> dict[int, int]:
+    def _allocated(self) -> list[tuple[_VJob, int]]:
+        """(vjob, allocated-slots) pairs with a positive allocation —
+        assumes deferred aging is already materialized (or mid-replay)."""
         if self._alloc_cache is None:
             demands = {
-                j: (v.effective_cap(), v.weight) for j, v in self.jobs.items()
+                j: (v._ecap(), v.weight) for j, v in self._jobs.items()
             }
-            rank = {j: v.size_rank for j, v in self.jobs.items()}
+            rank = {j: v.size_rank for j, v in self._jobs.items()}
             self._alloc_cache = discrete_allocation(demands, self.slots, rank)
+            self._allocated_cache = [
+                (self._jobs[j], a)
+                for j, a in self._alloc_cache.items()
+                if a > 0
+            ]
+        return self._allocated_cache
+
+    def allocation(self) -> dict[int, int]:
+        self._materialize()
+        self._allocated()
         return self._alloc_cache
 
     def projected_finish(self, now: float) -> dict[int, float]:
         """Absolute PS finish time per job — HFSP's sort key (Sect. 3.1)."""
+        self._materialize()
         return project_finish_times(
             {
-                j: (v.remaining, v.effective_cap(), v.weight)
-                for j, v in self.jobs.items()
+                j: (v.remaining, v._ecap(), v.weight)
+                for j, v in self._jobs.items()
             },
             self.slots,
             now,
         )
 
     def schedule_order(self, now: float) -> list[int]:
-        """Job ids sorted by projected finish time, ties by id (FIFO-ish)."""
+        """Job ids sorted by projected finish time, ties by id (FIFO-ish).
+
+        Served from cache without materializing deferred aging: aging
+        preserves the projected-finish order, so a valid cache stays
+        correct no matter how much un-replayed aging is queued."""
         if self._order_cache is None:
             fin = self.projected_finish(now)
             self._order_cache = sorted(
-                fin, key=lambda j: (fin[j], self.jobs[j].size_rank, j)
+                fin, key=lambda j: (fin[j], self._jobs[j].size_rank, j)
             )
         return self._order_cache

@@ -259,6 +259,7 @@ class GangRuntime:
             att.attempts += 1
             self._occupied[slot] = att
             self._slot_by_task[att.spec.key] = slot
+            self.scheduler.on_task_started(att, slot)
             return True
         if isinstance(action, Resume):
             att, slot = action.attempt, action.slot
@@ -269,6 +270,7 @@ class GangRuntime:
             js_of[att.spec.job_id].transition(att, TaskState.RUNNING)
             self._occupied[slot] = att
             self._slot_by_task[att.spec.key] = slot
+            self.scheduler.on_task_resumed(att, slot)
             return True
         if isinstance(action, Suspend):
             att = action.attempt
@@ -280,6 +282,7 @@ class GangRuntime:
             self._susp_bytes[slot.machine] = (
                 self._susp_bytes.get(slot.machine, 0) + 1
             )
+            self.scheduler.on_task_suspended(att)
             return False
         if isinstance(action, Kill):
             att = action.attempt
@@ -289,6 +292,7 @@ class GangRuntime:
             js_of[att.spec.job_id].transition(att, TaskState.PENDING)
             att.machine = None
             self.stats["kills"] += 1
+            self.scheduler.on_task_killed(att)
             return False
         raise TypeError(action)
 

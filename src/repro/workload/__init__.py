@@ -3,6 +3,7 @@ from repro.workload.fb import (
     WorkloadSpec,
     fb_cluster,
     fb_dataset,
+    fb_scaled_dataset,
     job_class,
     ml_dataset,
 )
@@ -12,6 +13,7 @@ __all__ = [
     "WorkloadSpec",
     "fb_cluster",
     "fb_dataset",
+    "fb_scaled_dataset",
     "job_class",
     "ml_dataset",
 ]

@@ -24,6 +24,7 @@ runs of the assigned architectures, tasks are step quanta (DESIGN.md §2).
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -31,6 +32,24 @@ import numpy as np
 from repro.core.types import ClusterSpec, JobSpec, Phase, TaskSpec
 
 FB_CLASSES = ("small", "medium", "large")
+
+# The paper's FB-dataset composition (Sect. 4.1), shared by fb_dataset and
+# fb_scaled_dataset so the stress workload can never drift from the
+# fidelity workload's class mix.
+FB_CLASS_COUNTS = {"small": 53, "medium": 41, "large": 6}  # per 100 jobs
+FB_LARGE_TEMPLATES = (
+    (3000, 0), (3000, 0), (700, 150), (1100, 200), (1500, 250), (200, 1000),
+)
+
+
+def _fb_class_sizes(num_jobs: int) -> tuple[int, int, int]:
+    """(n_small, n_medium, n_large) for a scaled FB-dataset."""
+    scale = num_jobs / 100.0
+    return (
+        max(1, round(FB_CLASS_COUNTS["small"] * scale)),
+        max(1, round(FB_CLASS_COUNTS["medium"] * scale)),
+        max(1, round(FB_CLASS_COUNTS["large"] * scale)),
+    )
 
 
 @dataclass
@@ -108,10 +127,7 @@ def fb_dataset(
     """Generate the FB-dataset-like workload.  Returns (jobs, class_of)."""
     spec = spec or WorkloadSpec()
     rng = np.random.default_rng(seed)
-    scale = num_jobs / 100.0
-    n_small = max(1, round(53 * scale))
-    n_medium = max(1, round(41 * scale))
-    n_large = max(1, round(6 * scale))
+    n_small, n_medium, n_large = _fb_class_sizes(num_jobs)
 
     shapes: list[tuple[int, int]] = []  # (num_map, num_reduce)
     for i in range(n_small):
@@ -121,9 +137,8 @@ def fb_dataset(
         n_red = 0 if rng.random() < 0.5 else int(rng.integers(2, 101))
         shapes.append((n_map, n_red))
     # Large class mirrors the paper's exact composition, scaled.
-    large_templates = [(3000, 0), (3000, 0), (700, 150), (1100, 200), (1500, 250), (200, 1000)]
     for i in range(n_large):
-        shapes.append(large_templates[i % len(large_templates)])
+        shapes.append(FB_LARGE_TEMPLATES[i % len(FB_LARGE_TEMPLATES)])
     rng.shuffle(shapes)
 
     jobs: list[JobSpec] = []
@@ -143,6 +158,119 @@ def fb_dataset(
             reduce_tasks=_mk_tasks(
                 rng, job_id, Phase.REDUCE, n_red, red_mu, spec.task_jitter,
                 spec.reduce_state_bytes, spec.num_machines, spec.replication,
+            ),
+            name=f"fb-{job_class(n_map)}-{job_id}",
+            reduce_slowstart=spec.reduce_slowstart,
+        )
+        jobs.append(job)
+        class_of[job_id] = job_class(n_map)
+    return jobs, class_of
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-stress scenario: the FB-dataset mix at trace scale
+# ---------------------------------------------------------------------------
+def _mk_tasks_fast(
+    rng: np.random.Generator,
+    job_id: int,
+    phase: Phase,
+    n: int,
+    mean_time: float,
+    jitter: float,
+    state_bytes: int,
+    num_machines: int,
+    replication: int,
+) -> tuple[TaskSpec, ...]:
+    """Vectorized task synthesis for trace-scale workloads (millions of
+    tasks).  Input hosts are drawn WITH replacement (duplicate replicas
+    are harmless: the locality index is keyed by host and idempotent) —
+    a deliberate, documented deviation from ``_mk_tasks``'s exact
+    without-replacement HDFS placement, trading a hair of placement
+    fidelity for ~20x faster generation."""
+    if n == 0:
+        return ()
+    if jitter > 0:
+        times = mean_time * rng.lognormal(0.0, jitter, size=n)
+    else:
+        times = np.full(n, mean_time)
+    times = np.maximum(times, 1.0)
+    r = min(replication, num_machines)
+    if phase is Phase.MAP:
+        hosts = rng.integers(0, num_machines, size=(n, r))
+        host_tuples = [tuple(int(h) for h in row) for row in hosts]
+    else:
+        host_tuples = [()] * n
+    return tuple(
+        TaskSpec(
+            job_id=job_id,
+            phase=phase,
+            index=i,
+            duration=float(times[i]),
+            input_hosts=host_tuples[i],
+            state_bytes=state_bytes,
+        )
+        for i in range(n)
+    )
+
+
+def fb_scaled_dataset(
+    seed: int = 0,
+    num_jobs: int = 10_000,
+    num_machines: int = 100,
+    spec: WorkloadSpec | None = None,
+) -> tuple[list[JobSpec], dict[int, str]]:
+    """Trace-scale FB-dataset: the paper's class mix at ``num_jobs`` scale.
+
+    The submission window is held at the paper's ~22 min regardless of
+    ``num_jobs`` (mean inter-arrival shrinks as 13 s x 100/num_jobs), so
+    scheduler load — concurrent live jobs — grows with the job count.
+    This is the scheduler-overhead stress scenario used by
+    ``benchmarks/bench_sched_overhead.py``; task synthesis is vectorized
+    (see :func:`_mk_tasks_fast`) so generating ~10k jobs / ~1M tasks stays
+    in seconds.
+    """
+    spec = spec or WorkloadSpec()
+    spec = dataclasses.replace(
+        spec,
+        num_machines=num_machines,
+        mean_interarrival=13.0 * 100.0 / max(num_jobs, 1),
+    )
+    rng = np.random.default_rng(seed)
+    n_small, n_medium, n_large = _fb_class_sizes(num_jobs)
+
+    shapes: list[tuple[int, int]] = []
+    small_two = rng.random(n_small) >= 0.75
+    for i in range(n_small):
+        shapes.append((2 if small_two[i] else 1, 0))
+    med_maps = rng.integers(5, 501, size=n_medium)
+    med_has_red = rng.random(n_medium) >= 0.5
+    med_reds = rng.integers(2, 101, size=n_medium)
+    for i in range(n_medium):
+        shapes.append((int(med_maps[i]), int(med_reds[i]) if med_has_red[i] else 0))
+    for i in range(n_large):
+        shapes.append(FB_LARGE_TEMPLATES[i % len(FB_LARGE_TEMPLATES)])
+    rng.shuffle(shapes)
+
+    interarrivals = rng.exponential(spec.mean_interarrival, size=len(shapes))
+    arrivals = np.cumsum(interarrivals)
+    map_mus = rng.uniform(spec.map_time_lo, spec.map_time_hi, size=len(shapes))
+    red_mus = rng.uniform(spec.reduce_time_lo, spec.reduce_time_hi, size=len(shapes))
+
+    jobs: list[JobSpec] = []
+    class_of: dict[int, str] = {}
+    for job_id, (n_map, n_red) in enumerate(shapes):
+        job = JobSpec(
+            job_id=job_id,
+            arrival_time=float(arrivals[job_id]),
+            map_tasks=_mk_tasks_fast(
+                rng, job_id, Phase.MAP, n_map, float(map_mus[job_id]),
+                spec.task_jitter, spec.map_state_bytes, spec.num_machines,
+                spec.replication,
+            ),
+            reduce_tasks=_mk_tasks_fast(
+                rng, job_id, Phase.REDUCE, n_red, float(red_mus[job_id]),
+                spec.task_jitter, spec.reduce_state_bytes, spec.num_machines,
+                spec.replication,
             ),
             name=f"fb-{job_class(n_map)}-{job_id}",
             reduce_slowstart=spec.reduce_slowstart,

@@ -1,0 +1,204 @@
+"""Equivalence tests for the incremental scheduler-state engine.
+
+The scheduler base keeps live run-state indexes (``_slot_of``,
+``_run_by_job``, ``_run_by_machine``) updated in O(1) per executor event
+instead of rebuilding them every pass.  These tests pin the contract:
+
+* ``SchedulerConfig.paranoid_indexes=True`` rebuilds the indexes from the
+  executor view on every pass and asserts they match the incremental ones
+  (content and per-bucket order) — any drift raises inside the run;
+* a paranoid run must produce byte-for-byte the same schedule as a normal
+  run: identical completions, locality counters, and preemption stats;
+* the lazy virtual-cluster aging must be observationally identical to
+  eager per-event aging (the replay applies the same floating-point
+  operations in the same order).
+"""
+
+import math
+
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    FairScheduler,
+    FIFOScheduler,
+    HFSPConfig,
+    HFSPScheduler,
+    Phase,
+    Preemption,
+    SchedulerConfig,
+    Simulator,
+)
+from repro.core.vcluster import VirtualCluster, discrete_allocation
+from repro.workload import fb_cluster, fb_dataset
+
+
+def _run(name, seed, paranoid, num_jobs=30):
+    cluster = fb_cluster(num_machines=20)
+    jobs, _ = fb_dataset(seed=seed, num_jobs=num_jobs)
+    if name == "fifo":
+        sch = FIFOScheduler(cluster, SchedulerConfig(paranoid_indexes=paranoid))
+    elif name == "fair":
+        sch = FairScheduler(cluster, SchedulerConfig(paranoid_indexes=paranoid))
+    else:
+        cfg = HFSPConfig(paranoid_indexes=paranoid)
+        if name == "hfsp-kill":
+            cfg.preemption = Preemption.KILL
+        sch = HFSPScheduler(cluster, cfg)
+    res = Simulator(cluster, sch, jobs).run()
+    st = res.stats
+    return {
+        "completion": dict(res.completion),
+        "locality": (res.locality_hits, res.locality_misses),
+        "preemption": (st.suspensions, st.resumes, st.kills, st.waits),
+        "delay": st.delay_sched_waits,
+        "training": st.training_tasks,
+    }
+
+
+@pytest.mark.parametrize("name", ["fifo", "fair", "hfsp", "hfsp-kill"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_incremental_matches_rebuild_reference(name, seed):
+    """The cross-checked (rebuild-from-scratch reference) run and the
+    plain incremental run must produce identical schedules.  The paranoid
+    run itself asserts index equality inside every scheduling pass."""
+    fast = _run(name, seed, paranoid=False)
+    checked = _run(name, seed, paranoid=True)
+    assert fast == checked
+
+
+def test_paranoid_mode_detects_corruption():
+    """Sanity-check that the paranoid cross-check actually fires: corrupt
+    the incremental index mid-run and expect the assertion."""
+    cluster = fb_cluster(num_machines=4)
+    jobs, _ = fb_dataset(seed=0, num_jobs=10)
+    sch = HFSPScheduler(cluster, HFSPConfig(paranoid_indexes=True))
+
+    orig = sch.on_task_started
+    calls = {"n": 0}
+
+    def corrupting_hook(att, slot):
+        orig(att, slot)
+        calls["n"] += 1
+        if calls["n"] == 5:
+            # Move the entry to the wrong machine bucket.  Counts still
+            # match (so the cheap resync fallback cannot repair it) — only
+            # the paranoid cross-check can catch this.
+            pv = slot.phase.value
+            sch._run_by_machine[(slot.machine, pv)].pop(att.spec.key)
+            sch._run_by_machine.setdefault(
+                (slot.machine + 1, pv), {}
+            )[att.spec.key] = att
+
+    sch.on_task_started = corrupting_hook
+    with pytest.raises(AssertionError):
+        Simulator(cluster, sch, jobs).run()
+
+
+def test_unclaimed_pending_counter():
+    """_unclaimed_pending must agree with a direct recount of claimed
+    PENDING tasks, across claim kinds."""
+    from repro.core.types import JobSpec, TaskSpec, TaskState
+
+    cluster = ClusterSpec(num_machines=2)
+    sch = FIFOScheduler(cluster)
+    spec = JobSpec(
+        job_id=7,
+        arrival_time=0.0,
+        map_tasks=tuple(TaskSpec(7, Phase.MAP, i, 5.0) for i in range(6)),
+        reduce_tasks=(),
+    )
+    js = sch.on_job_arrival(spec, 0.0)
+    sch._begin_pass()
+    assert sch._unclaimed_pending(js, Phase.MAP) == 6
+    atts = list(js.tasks.values())
+    sch._claim(atts[0])
+    sch._claim(atts[1])
+    assert sch._unclaimed_pending(js, Phase.MAP) == 4
+    # A claim of a non-PENDING task must not decrement the counter.
+    js.transition(atts[2], TaskState.RUNNING)
+    sch._claim(atts[2])
+    assert sch._unclaimed_pending(js, Phase.MAP) == 3  # 5 pending - 2 claimed
+    sch._begin_pass()
+    assert sch._unclaimed_pending(js, Phase.MAP) == 5
+
+
+def test_lazy_aging_is_exact():
+    """Deferred aging + replay must equal eager per-event aging, including
+    the mid-sequence reallocation when a job's virtual tail shrinks."""
+    def build():
+        vc = VirtualCluster(phase=Phase.MAP, slots=8)
+        vc.add_job(1, 40.0, 4)    # task_time 10, ecap 4
+        vc.add_job(2, 100.0, 10)  # task_time 10, ecap 10
+        return vc
+
+    dts = [0.7, 1.3, 2.0, 5.0, 0.1, 3.3, 4.0, 8.0, 1.1]
+
+    eager = build()
+    for dt in dts:
+        eager.age(dt)
+        eager.allocation()  # force materialization after every event
+
+    lazy = build()
+    for dt in dts:
+        lazy.age(dt)  # all deferred; replayed by the queries below
+
+    for j in (1, 2):
+        assert lazy.remaining(j) == eager.remaining(j)
+        assert lazy.jobs[j].done == eager.jobs[j].done
+        assert lazy.jobs[j].effective_cap() == eager.jobs[j].effective_cap()
+    assert lazy.allocation() == eager.allocation()
+
+
+def test_lazy_aging_order_cache_served_without_flush():
+    """schedule_order() on a warm cache must not flush deferred aging
+    (aging preserves the projected-finish order)."""
+    vc = VirtualCluster(phase=Phase.MAP, slots=4)
+    vc.add_job(1, 100.0, 10)
+    vc.add_job(2, 40.0, 10)
+    before = vc.schedule_order(0.0)
+    vc.age(5.0)
+    assert vc._pending_dts  # still deferred
+    assert vc.schedule_order(5.0) == before
+    assert vc._pending_dts  # the cached query did not force a replay
+    assert vc.remaining(1) < 100.0  # an explicit query does
+    assert not vc._pending_dts
+
+
+def test_discrete_allocation_leftovers_match_scalar_round_robin():
+    """The vectorized leftover distribution must equal the one-slot-at-a-
+    time round-robin it replaced."""
+    import numpy as np
+
+    def scalar_reference(demands, slots, rank):
+        ids = sorted(demands, key=lambda j: (rank.get(j, 0), j))
+        caps = np.array([demands[j][0] for j in ids])
+        from repro.core.vcluster import _water_fill
+        ws = np.array([demands[j][1] for j in ids])
+        cont = _water_fill(caps.astype(float), ws.astype(float), float(slots))
+        base = np.minimum(np.floor(cont + 1e-9), caps).astype(np.int64)
+        free = int(slots) - int(base.sum())
+        if free > 0:
+            headroom = (caps - base).astype(np.int64)
+            while free > 0 and (headroom > 0).any():
+                for i in range(len(ids)):
+                    if free <= 0:
+                        break
+                    if headroom[i] > 0:
+                        base[i] += 1
+                        headroom[i] -= 1
+                        free -= 1
+        return {j: int(b) for j, b in zip(ids, base)}
+
+    rng = __import__("numpy").random.default_rng(0)
+    for trial in range(200):
+        n = int(rng.integers(1, 12))
+        demands = {
+            j: (float(rng.integers(0, 30)), float(rng.uniform(0.1, 4.0)))
+            for j in range(n)
+        }
+        rank = {j: int(rng.integers(0, 10)) for j in range(n)}
+        slots = int(rng.integers(0, 80))
+        assert discrete_allocation(demands, slots, rank) == scalar_reference(
+            demands, slots, rank
+        ), (demands, slots, rank)
