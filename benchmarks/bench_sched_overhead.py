@@ -15,6 +15,18 @@ and reports, per cell:
   relative to the budget, so every cell measures the scheduler under
   full queue pressure, not the drain tail).
 
+A second CSV block (``waterfill_micro``) characterizes the virtual-cluster
+water-fill kernels themselves — ROADMAP's "numpy loops recomputed on every
+structural event" — numpy reference vs the jitted JAX backend
+(:mod:`repro.core.vcluster_jax`), per job-grid cell:
+
+* **fill**: one weighted max-min water-fill over the cell's demands;
+* **proj**: one PS finish-time projection (the water-fill driven in a
+  loop, one round per job completion — HFSP's schedule-order kernel and
+  the dominant per-structural-event cost at trace scale);
+* **waterfill_speedup**: numpy/jax projection-loop ratio, the headline
+  column recorded into BENCH_sched.json by ``benchmarks/run.py --quick``.
+
 Usage:
   PYTHONPATH=src python -m benchmarks.bench_sched_overhead \
       [--schedulers hfsp,fair,fifo] [--jobs 50,500,5000] \
@@ -26,6 +38,8 @@ from __future__ import annotations
 import argparse
 import time
 
+import numpy as np
+
 from benchmarks.common import SCHEDULERS, CsvOut
 from repro.core import Simulator
 from repro.core.simulator import EventLimitReached
@@ -34,6 +48,96 @@ from repro.workload import fb_scaled_dataset
 
 JOB_GRID = (50, 500, 5000)
 MACHINE_GRID = (20, 200, 1000)
+
+
+def waterfill_cell(
+    n_jobs: int, *, seed: int = 0, reps: int = 5, machines: int = 1000
+) -> dict:
+    """Water-fill kernel microbenchmark at one job-count cell.
+
+    Demands come from the scaled FB trace (heavy-tailed task counts);
+    remaining work is task-count x a plausible per-task time, weights are
+    1.0 and slots mirror the grid's 1000-machine MAP capacity — the state
+    the virtual cluster actually feeds these kernels at this scale.
+    Best-of-``reps`` timings (min is the standard noise-robust estimator
+    for microbenches); jit warmup/compile happens before timing.
+    """
+    from repro.core.vcluster import _project_array, _water_fill
+
+    jobs, _ = fb_scaled_dataset(
+        seed=seed, num_jobs=n_jobs, num_machines=machines
+    )
+    caps = np.array([len(j.map_tasks) for j in jobs], dtype=np.float64)
+    rng = np.random.default_rng(seed)
+    # The scaled trace can return slightly fewer jobs than requested;
+    # size everything off the demands actually produced.
+    rem = caps * rng.uniform(5.0, 50.0, len(caps))
+    ws = np.ones(len(caps))
+    slots = float(4 * machines)  # map_slots_per_machine=4, as in run_cell
+
+    def best(fn) -> float:
+        out = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            out.append(time.perf_counter() - t0)
+        return min(out) * 1e3
+
+    cell = {
+        "jobs": n_jobs,
+        "fill_numpy_ms": best(lambda: _water_fill(caps, ws, slots)),
+        "proj_numpy_ms": best(
+            lambda: _project_array(rem.copy(), caps, ws, slots, 0.0)
+        ),
+        "fill_jax_ms": None,
+        "proj_jax_ms": None,
+        "waterfill_speedup": None,
+    }
+    try:
+        from repro.core import vcluster_jax
+
+        if not vcluster_jax.have_jax():
+            return cell
+    except Exception:
+        return cell
+    vcluster_jax.water_fill(caps, ws, slots)  # compile
+    vcluster_jax.project_finish_times(rem, caps, ws, slots, 0.0)
+    cell["fill_jax_ms"] = best(
+        lambda: vcluster_jax.water_fill(caps, ws, slots)
+    )
+    cell["proj_jax_ms"] = best(
+        lambda: vcluster_jax.project_finish_times(rem, caps, ws, slots, 0.0)
+    )
+    cell["waterfill_speedup"] = cell["proj_numpy_ms"] / cell["proj_jax_ms"]
+    return cell
+
+
+def run_waterfill_micro(job_grid=JOB_GRID, *, seed: int = 0) -> list[dict]:
+    out = CsvOut(
+        "waterfill_micro",
+        ["jobs", "fill_numpy_ms", "fill_jax_ms", "proj_numpy_ms",
+         "proj_jax_ms", "waterfill_speedup"],
+    )
+    cells = []
+    for nj in job_grid:
+        cell = waterfill_cell(nj, seed=seed)
+        cells.append(cell)
+        fmt = lambda v, nd=3: round(v, nd) if v is not None else ""
+        out.add(
+            cell["jobs"], fmt(cell["fill_numpy_ms"]),
+            fmt(cell["fill_jax_ms"]), fmt(cell["proj_numpy_ms"]),
+            fmt(cell["proj_jax_ms"]), fmt(cell["waterfill_speedup"], 2),
+        )
+        speed = cell["waterfill_speedup"]
+        print(
+            f"# waterfill jobs={nj}: proj numpy "
+            f"{cell['proj_numpy_ms']:.2f}ms vs jax "
+            + (f"{cell['proj_jax_ms']:.2f}ms ({speed:.1f}x)"
+               if speed is not None else "n/a (jax unavailable)"),
+            flush=True,
+        )
+    out.emit()
+    return cells
 
 
 class _TimedScheduler:
@@ -119,6 +223,8 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--max-cell-seconds", type=float, default=45.0,
                     help="wall-clock cap per cell")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-waterfill", action="store_true",
+                    help="skip the water-fill kernel microbenchmark")
     args = ap.parse_args(argv)
 
     out = CsvOut(
@@ -152,6 +258,10 @@ def main(argv: list[str] | None = None) -> None:
                     flush=True,
                 )
     out.emit()
+    if not args.no_waterfill:
+        run_waterfill_micro(
+            tuple(int(x) for x in args.jobs.split(",")), seed=args.seed
+        )
 
 
 if __name__ == "__main__":

@@ -56,7 +56,9 @@ def quick_sched_wall(json_path: str | None = None, seed: int = 0) -> dict:
 
     The JSON records, per scheduler: wall-clock seconds, mean sojourn, and
     a completion fingerprint (so a perf regression AND a behaviour change
-    are both visible in the trajectory file).
+    are both visible in the trajectory file), plus the water-fill kernel
+    microbenchmark at the 5000-job cell (numpy loop vs jitted jax backend,
+    see benchmarks/bench_sched_overhead.py).
     """
     from benchmarks.common import CsvOut, run_fb
 
@@ -79,6 +81,18 @@ def quick_sched_wall(json_path: str | None = None, seed: int = 0) -> dict:
         }
         print(f"# {name}: {wall:.2f}s wall", flush=True)
     out.emit()
+    cell = bench_sched_overhead.waterfill_cell(5000, seed=seed)
+    record["waterfill_5000"] = {
+        k: (round(v, 3) if isinstance(v, float) else v)
+        for k, v in cell.items()
+    }
+    speed = cell["waterfill_speedup"]
+    print(
+        "# waterfill@5000: "
+        + (f"{speed:.1f}x jax speedup" if speed is not None
+           else "jax unavailable"),
+        flush=True,
+    )
     if json_path:
         with open(json_path, "w") as f:
             json.dump(record, f, indent=2, sort_keys=True)

@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Scheduler-overhead trajectory gate (ROADMAP: "wire BENCH_sched.json
+into a history file across PRs so perf regressions are caught
+automatically").
+
+Reads the record ``benchmarks/run.py --quick --json`` just wrote, appends
+it (timestamped, with its verdict) to a JSONL history file, and fails
+when the hfsp wall-clock regressed more than ``--threshold`` (default
+25%) versus the baseline.  The baseline is the most recent entry that
+did NOT itself fail the gate — a regressed run is recorded for the
+trajectory but never becomes the baseline, so re-running the gate after
+a failure cannot silently ratchet the regression in.
+
+Usage (scripts/check.sh runs this after the quick bench):
+  python scripts/bench_gate.py [--json BENCH_sched.json] \
+      [--history BENCH_history.jsonl] [--threshold 0.25] [--key hfsp]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+
+def gate(
+    json_path: str = "BENCH_sched.json",
+    history_path: str = "BENCH_history.jsonl",
+    threshold: float = 0.25,
+    key: str = "hfsp",
+) -> int:
+    record = dict(json.loads(Path(json_path).read_text()))
+    history = Path(history_path)
+    # Baseline = newest entry that did not itself fail the gate (entries
+    # from before the gate field existed count as passing).
+    baseline = None
+    if history.exists():
+        for ln in reversed(history.read_text().splitlines()):
+            if not ln.strip():
+                continue
+            entry = json.loads(ln)
+            if entry.get("gate", "ok") == "ok":
+                baseline = entry
+                break
+
+    new_wall = record["schedulers"][key]["wall_s"]
+    record["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S%z")
+    if baseline is None:
+        record["gate"] = "ok"
+        with history.open("a") as f:
+            f.write(json.dumps(record, sort_keys=True) + "\n")
+        print(f"bench_gate: first history entry ({key} {new_wall:.3f}s); "
+              f"nothing to compare")
+        return 0
+    old_wall = baseline["schedulers"][key]["wall_s"]
+    limit = old_wall * (1.0 + threshold)
+    verdict = "OK" if new_wall <= limit else "REGRESSION"
+    record["gate"] = verdict.lower()
+    with history.open("a") as f:
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+    print(
+        f"bench_gate: {key} wall {old_wall:.3f}s -> {new_wall:.3f}s "
+        f"(limit {limit:.3f}s, +{threshold:.0%}): {verdict}"
+    )
+    if verdict != "OK":
+        print(
+            f"bench_gate: {key} wall-clock regressed "
+            f"{new_wall / old_wall - 1.0:+.1%} vs the previous entry in "
+            f"{history_path}; investigate before merging (or delete the "
+            f"stale entry if the machine changed)."
+        )
+        return 1
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_sched.json")
+    ap.add_argument("--history", default="BENCH_history.jsonl")
+    ap.add_argument("--threshold", type=float, default=0.25)
+    ap.add_argument("--key", default="hfsp")
+    args = ap.parse_args()
+    sys.exit(gate(args.json, args.history, args.threshold, args.key))
+
+
+if __name__ == "__main__":
+    main()

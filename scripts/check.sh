@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
-# One-command gate: tier-1 tests + the quick scheduler benchmark.
+# One-command gate: tier-1 tests + the quick scheduler benchmark + the
+# perf-trajectory gate (appends BENCH_sched.json to BENCH_history.jsonl
+# and fails on a >25% hfsp wall-clock regression vs the previous entry).
 #
-#   scripts/check.sh            # tests + quick bench, JSON to BENCH_sched.json
+#   scripts/check.sh            # tests + quick bench + trajectory gate
 #   scripts/check.sh --no-bench # tests only
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -14,4 +16,8 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   echo
   echo "== quick scheduler benchmark =="
   python -m benchmarks.run --quick --json BENCH_sched.json
+  echo
+  echo "== perf trajectory gate =="
+  python scripts/bench_gate.py --json BENCH_sched.json \
+    --history BENCH_history.jsonl --threshold 0.25
 fi

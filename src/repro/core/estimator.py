@@ -239,6 +239,29 @@ class TrainingModule:
                 out.append(key)
         return out
 
+    def candidate_sizes(self, job: JobState, phase: Phase) -> list[float]:
+        """Hypothetical phase sizes consistent with the observations so far.
+
+        While a job is still training, its size estimate is provisional —
+        each new sample observation can move it.  This returns the full
+        refit plus every leave-one-out refit of the current sample
+        durations (<= sample_set_size + 1 candidates, deterministic), i.e.
+        the spread of sizes the estimator could settle on.  Feed these to
+        :meth:`VirtualCluster.projected_finish_batch` (via
+        ``HFSPScheduler.rank_stability``) to price all what-if
+        re-projections in one batched kernel call."""
+        st = self._training.get((job.spec.job_id, phase))
+        if st is None or not st.observed:
+            return []
+        obs = list(st.observed.values())
+        n_tasks = len(job.spec.tasks(phase))
+        sizes = [float(sum(self.estimator.fit_vector(obs, n_tasks)))]
+        if len(obs) > 1:
+            for i in range(len(obs)):
+                sub = obs[:i] + obs[i + 1:]
+                sizes.append(float(sum(self.estimator.fit_vector(sub, n_tasks))))
+        return sizes
+
     # -- observations ----------------------------------------------------------
     def observe_completion(self, job: JobState, phase: Phase, key: tuple,
                            duration: float) -> float | None:

@@ -35,16 +35,50 @@ Performance notes (the scheduler runs on every executor event):
   time under the allocation in force at that point (re-checking effective
   caps after every step, exactly like the old eager loop), so the
   resulting floating-point state is bit-identical to eager aging.
+
+Numeric backends: the water-fill and finish-time-projection kernels exist
+in two interchangeable implementations — the numpy reference in this
+module and a jitted, padded-fixed-shape JAX version in
+:mod:`repro.core.vcluster_jax` (selected per instance via
+``VirtualCluster(backend="numpy"|"jax")`` or globally via the
+``REPRO_VC_BACKEND`` environment variable; the conformance suite in
+``tests/test_conformance.py`` pins their behavioral equivalence).  See
+docs/vcluster.md for the math and the jit/recompile contract.
 """
 
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.core.types import Phase
+
+#: Recognized numeric backends for the water-fill / projection kernels.
+#: "numpy" is the scalar reference; "jax" is the jitted fixed-shape
+#: implementation in :mod:`repro.core.vcluster_jax` (see docs/vcluster.md).
+BACKENDS = ("numpy", "jax")
+
+#: Environment override for the default backend (documented in ROADMAP.md).
+BACKEND_ENV = "REPRO_VC_BACKEND"
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Pick the kernel backend: explicit arg > $REPRO_VC_BACKEND > numpy."""
+    b = backend or os.environ.get(BACKEND_ENV) or "numpy"
+    if b not in BACKENDS:
+        raise ValueError(f"unknown vcluster backend {b!r}; expected one of {BACKENDS}")
+    if b == "jax":
+        from repro.core import vcluster_jax
+
+        if not vcluster_jax.have_jax():
+            raise RuntimeError(
+                "vcluster backend 'jax' requested but jax is not importable; "
+                f"install jax or set {BACKEND_ENV}=numpy"
+            )
+    return b
 
 
 @dataclass
@@ -125,6 +159,7 @@ def discrete_allocation(
     demands: dict[int, tuple[float, float]],
     slots: int,
     size_rank: dict[int, int],
+    backend: str = "numpy",
 ) -> dict[int, int]:
     """Integer max-min allocation via round-robin, small jobs first.
 
@@ -142,7 +177,12 @@ def discrete_allocation(
     ids = sorted(demands, key=lambda j: (size_rank.get(j, 0), j))
     caps = np.array([demands[j][0] for j in ids], dtype=np.float64)
     ws = np.array([demands[j][1] for j in ids], dtype=np.float64)
-    cont = _water_fill(caps, ws, float(slots))
+    if backend == "jax":
+        from repro.core import vcluster_jax
+
+        cont = vcluster_jax.water_fill(caps, ws, float(slots))
+    else:
+        cont = _water_fill(caps, ws, float(slots))
     base = np.minimum(np.floor(cont + 1e-9), caps).astype(np.int64)
     free = int(slots) - int(base.sum())
     headroom = (caps - base).astype(np.int64)
@@ -183,12 +223,22 @@ def project_finish_times(
     rem = np.array([jobs[j][0] for j in ids], dtype=np.float64)
     caps = np.array([jobs[j][1] for j in ids], dtype=np.float64)
     ws = np.array([jobs[j][2] for j in ids], dtype=np.float64)
-    fin = np.full(len(ids), np.inf)
+    fin = _project_array(rem, caps, ws, slots, now)
+    return {j: float(f) for j, f in zip(ids, fin)}
+
+
+def _project_array(
+    rem: np.ndarray, caps: np.ndarray, ws: np.ndarray, slots: float, now: float
+) -> np.ndarray:
+    """Array-shaped core of :func:`project_finish_times` (shared with the
+    numpy path of :meth:`VirtualCluster.projected_finish_batch`)."""
+    rem = rem.copy()
+    fin = np.full(len(rem), np.inf)
     live = (rem > 0) & (caps > 0)
     fin[~live] = now
     t = now
     while live.any():
-        alloc = np.zeros(len(ids))
+        alloc = np.zeros(len(rem))
         alloc[live] = _water_fill(caps[live], ws[live], float(slots))
         with np.errstate(divide="ignore", invalid="ignore"):
             dt = np.where(live & (alloc > 0), rem / np.maximum(alloc, 1e-300), np.inf)
@@ -200,15 +250,18 @@ def project_finish_times(
         done = live & (dt <= dt_min + 1e-12)
         fin[done] = t
         live &= ~done
-    return {j: float(f) for j, f in zip(ids, fin)}
+    return fin
 
 
 class VirtualCluster:
     """Mirror of the real cluster for one phase (Sect. 3.1)."""
 
-    def __init__(self, phase: Phase, slots: int):
+    def __init__(self, phase: Phase, slots: int, backend: str | None = None):
         self.phase = phase
         self.slots = slots
+        #: Numeric backend for water-fill/projection kernels ("numpy" or
+        #: "jax"); resolved once at construction (see resolve_backend).
+        self.backend = resolve_backend(backend)
         self._jobs: dict[int, _VJob] = {}
         self._alloc_cache: dict[int, int] | None = None
         # Allocated (vjob, slots) pairs with slots > 0 — the only jobs
@@ -270,6 +323,12 @@ class VirtualCluster:
         if job_id in self._jobs:
             self._materialize()
             self._jobs[job_id].remaining = remaining
+            # The virtual parallelism (_ecap) is derived from `remaining`,
+            # so a stale discrete allocation must not survive this update:
+            # a lazily-timed rebuild would otherwise make the *timing* of
+            # cache rebuilds observable in later aging (non-determinism
+            # caught by test_schedule_order_deterministic_under_lazy_aging).
+            self._invalidate_alloc()
             self._invalidate_order()
 
     def set_size(self, job_id: int, size: float) -> None:
@@ -343,7 +402,9 @@ class VirtualCluster:
                 j: (v._ecap(), v.weight) for j, v in self._jobs.items()
             }
             rank = {j: v.size_rank for j, v in self._jobs.items()}
-            self._alloc_cache = discrete_allocation(demands, self.slots, rank)
+            self._alloc_cache = discrete_allocation(
+                demands, self.slots, rank, backend=self.backend
+            )
             self._allocated_cache = [
                 (self._jobs[j], a)
                 for j, a in self._alloc_cache.items()
@@ -356,9 +417,28 @@ class VirtualCluster:
         self._allocated()
         return self._alloc_cache
 
+    def _state_arrays(self) -> tuple[list[int], np.ndarray, np.ndarray, np.ndarray]:
+        """(ids, remaining, effective caps, weights) of the live jobs —
+        assumes deferred aging is already materialized."""
+        ids = list(self._jobs)
+        rem = np.array([self._jobs[j].remaining for j in ids], dtype=np.float64)
+        caps = np.array(
+            [float(self._jobs[j]._ecap()) for j in ids], dtype=np.float64
+        )
+        ws = np.array([self._jobs[j].weight for j in ids], dtype=np.float64)
+        return ids, rem, caps, ws
+
     def projected_finish(self, now: float) -> dict[int, float]:
         """Absolute PS finish time per job — HFSP's sort key (Sect. 3.1)."""
         self._materialize()
+        if self.backend == "jax":
+            from repro.core import vcluster_jax
+
+            ids, rem, caps, ws = self._state_arrays()
+            fin = vcluster_jax.project_finish_times(
+                rem, caps, ws, float(self.slots), float(now)
+            )
+            return {j: float(f) for j, f in zip(ids, fin)}
         return project_finish_times(
             {
                 j: (v.remaining, v._ecap(), v.weight)
@@ -368,6 +448,96 @@ class VirtualCluster:
             now,
         )
 
+    def projected_finish_batch(
+        self,
+        scenarios: list[dict[int, float]],
+        now: float,
+        as_sizes: bool = False,
+    ) -> list[dict[int, float]]:
+        """What-if PS finish times for many hypothetical job sizes at once.
+
+        Each scenario maps job_id -> a hypothetical override for that job
+        (jobs not named keep their current state).  With the default
+        ``as_sizes=False`` the override is the *remaining* serialized
+        work, priced exactly as if ``set_remaining`` had been applied
+        (virtual parallelism re-derived from the job's current task_time).
+        With ``as_sizes=True`` the override is a hypothetical *total*
+        phase size, priced exactly as if ``set_size`` had been applied:
+        remaining becomes ``max(0, size - done)`` and the per-task time —
+        hence the virtual tail — is re-derived from the new size.  On the
+        jax backend all scenarios price in a single vmapped dispatch; the
+        numpy backend loops, so both backends return identical values and
+        this method is safe to use from policy code regardless of
+        configuration.
+        """
+        self._materialize()
+        ids, rem, caps, ws = self._state_arrays()
+        if not scenarios:
+            return []
+        if not ids:
+            return [{} for _ in scenarios]
+        idx = {j: i for i, j in enumerate(ids)}
+        b = len(scenarios)
+        rem_b = np.tile(rem, (b, 1))
+        caps_b = np.tile(caps, (b, 1))
+        for s, overrides in enumerate(scenarios):
+            for j, val in overrides.items():
+                i = idx.get(j)
+                if i is None:
+                    continue
+                v = self._jobs[j]
+                if as_sizes:
+                    r = max(0.0, val - v.done)
+                    tt = (
+                        max(val / v.cap, 1e-9)
+                        if v.cap and math.isfinite(val)
+                        else v.task_time
+                    )
+                else:
+                    r = val
+                    tt = v.task_time
+                rem_b[s, i] = r
+                caps_b[s, i] = float(self._whatif_ecap(v, r, tt))
+        if self.backend == "jax":
+            from repro.core import vcluster_jax
+
+            fin_b = vcluster_jax.project_finish_times_batch(
+                rem_b, caps_b, np.tile(ws, (b, 1)), float(self.slots), float(now)
+            )
+        else:
+            fin_b = np.stack(
+                [
+                    _project_array(rem_b[s], caps_b[s], ws, self.slots, now)
+                    for s in range(b)
+                ]
+            )
+        return [
+            {j: float(f) for j, f in zip(ids, row)} for row in fin_b
+        ]
+
+    @staticmethod
+    def _whatif_ecap(v: _VJob, remaining: float, task_time: float) -> int:
+        """Effective cap a job WOULD have at a hypothetical remaining
+        (and, for size-override scenarios, a re-derived task_time)."""
+        if math.isinf(remaining) or task_time <= 0:
+            return v.cap
+        return max(
+            1, min(v.cap, int(math.ceil(remaining / task_time - 1e-9)))
+        )
+
+    def _order_from_fin(self, fin: dict[int, float]) -> list[int]:
+        return sorted(fin, key=lambda j: (fin[j], self._jobs[j].size_rank, j))
+
+    def order_cache_cold(self) -> bool:
+        """True when the next schedule_order() must run a projection."""
+        return self._order_cache is None and bool(self._jobs)
+
+    def warm_order_cache(self, fin: dict[int, float]) -> None:
+        """Install a schedule order from an externally computed projection
+        (the scheduler's batched cross-phase warm).  ``fin`` must be this
+        cluster's own projected finish map at the current virtual time."""
+        self._order_cache = self._order_from_fin(fin)
+
     def schedule_order(self, now: float) -> list[int]:
         """Job ids sorted by projected finish time, ties by id (FIFO-ish).
 
@@ -375,8 +545,5 @@ class VirtualCluster:
         preserves the projected-finish order, so a valid cache stays
         correct no matter how much un-replayed aging is queued."""
         if self._order_cache is None:
-            fin = self.projected_finish(now)
-            self._order_cache = sorted(
-                fin, key=lambda j: (fin[j], self._jobs[j].size_rank, j)
-            )
+            self._order_cache = self._order_from_fin(self.projected_finish(now))
         return self._order_cache

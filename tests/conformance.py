@@ -1,0 +1,83 @@
+"""Reusable golden-trace equivalence harness.
+
+Runs a scheduler over the FB trace workload and reduces the outcome to a
+comparable summary (completion times, locality counters, preemption and
+delay-scheduling stats).  Two runs that should be behaviorally identical —
+incremental vs paranoid-cross-checked indexes, numpy vs jax virtual-cluster
+backend, lazy vs eager aging — must produce *equal* summaries, floats
+included: the contract everywhere is bit-identical schedules, not
+approximately-similar ones.
+
+Used by tests/test_incremental_engine.py (engine equivalence) and
+tests/test_conformance.py (vcluster backend conformance).
+"""
+
+from __future__ import annotations
+
+from repro.core import (
+    FairScheduler,
+    FIFOScheduler,
+    HFSPConfig,
+    HFSPScheduler,
+    Preemption,
+    SchedulerConfig,
+    Simulator,
+)
+from repro.workload import fb_cluster, fb_dataset
+
+#: Scheduler variants the golden-trace suites cover.
+TRACE_SCHEDULERS = ("fifo", "fair", "hfsp", "hfsp-kill")
+
+#: Seeds of the golden traces.
+GOLDEN_SEEDS = (0, 1, 2)
+
+
+def run_trace(
+    name: str,
+    seed: int,
+    *,
+    paranoid: bool = False,
+    vc_backend: str | None = None,
+    num_jobs: int = 30,
+    num_machines: int = 20,
+) -> dict:
+    """One FB-trace simulation; returns the comparable outcome summary.
+
+    ``vc_backend`` selects the virtual-cluster kernel backend for the HFSP
+    variants (fifo/fair have no virtual cluster and ignore it).
+    """
+    cluster = fb_cluster(num_machines=num_machines)
+    jobs, _ = fb_dataset(seed=seed, num_jobs=num_jobs)
+    if name == "fifo":
+        sch = FIFOScheduler(cluster, SchedulerConfig(paranoid_indexes=paranoid))
+    elif name == "fair":
+        sch = FairScheduler(cluster, SchedulerConfig(paranoid_indexes=paranoid))
+    else:
+        cfg = HFSPConfig(paranoid_indexes=paranoid, vc_backend=vc_backend)
+        if name == "hfsp-kill":
+            cfg.preemption = Preemption.KILL
+        sch = HFSPScheduler(cluster, cfg)
+    res = Simulator(cluster, sch, jobs).run()
+    st = res.stats
+    return {
+        "completion": dict(res.completion),
+        "locality": (res.locality_hits, res.locality_misses),
+        "preemption": (st.suspensions, st.resumes, st.kills, st.waits),
+        "delay": st.delay_sched_waits,
+        "training": st.training_tasks,
+    }
+
+
+def assert_traces_equal(a: dict, b: dict) -> None:
+    """Assert two run_trace summaries are bit-identical, diffing the
+    first divergent completions on failure (an opaque dict-compare failure
+    over 30 float completion times is useless for debugging)."""
+    ca, cb = a["completion"], b["completion"]
+    assert set(ca) == set(cb), (
+        f"job sets differ: only-in-a={set(ca) - set(cb)} "
+        f"only-in-b={set(cb) - set(ca)}"
+    )
+    diffs = {j: (ca[j], cb[j]) for j in ca if ca[j] != cb[j]}
+    assert not diffs, f"completion times differ (job: (a, b)): {diffs}"
+    for key in ("locality", "preemption", "delay", "training"):
+        assert a[key] == b[key], f"{key} differs: {a[key]} != {b[key]}"

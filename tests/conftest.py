@@ -3,6 +3,15 @@ import os
 # Smoke tests and benchmarks must see the REAL device count (the dry-run
 # alone forces 512 host devices, in its own process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# Deterministic jax/XLA numerics for the vcluster backend-conformance
+# suite: a fixed single-threaded CPU reduction order makes kernel outputs
+# reproducible across CI machines and laptops (threaded reductions may
+# reassociate float sums).  setdefault only — an externally configured
+# XLA_FLAGS (e.g. the dry-run's forced device count) wins.
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1",
+)
 
 import pytest  # noqa: E402
 

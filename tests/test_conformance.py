@@ -1,0 +1,24 @@
+"""Golden-trace conformance: numpy vs jax virtual-cluster backends.
+
+The jax kernels (repro.core.vcluster_jax) must be *behaviorally*
+interchangeable with the numpy reference: identical completion times,
+locality counters, and preemption stats on the golden FB traces, for every
+scheduler.  fifo/fair carry no virtual cluster, so their rows pin that the
+backend knob is inert where it should be; the hfsp variants exercise the
+water-fill, projection, and batched cross-phase warm paths on every
+scheduling pass.
+"""
+
+import pytest
+
+from conformance import GOLDEN_SEEDS, TRACE_SCHEDULERS, assert_traces_equal, run_trace
+
+pytest.importorskip("jax")
+
+
+@pytest.mark.parametrize("seed", GOLDEN_SEEDS)
+@pytest.mark.parametrize("name", TRACE_SCHEDULERS)
+def test_backend_conformance(name, seed):
+    ref = run_trace(name, seed, vc_backend="numpy")
+    jax_run = run_trace(name, seed, vc_backend="jax")
+    assert_traces_equal(ref, jax_run)

@@ -14,57 +14,30 @@ instead of rebuilding them every pass.  These tests pin the contract:
   operations in the same order).
 """
 
-import math
-
 import pytest
 
+from conformance import TRACE_SCHEDULERS, assert_traces_equal, run_trace
 from repro.core import (
     ClusterSpec,
-    FairScheduler,
     FIFOScheduler,
     HFSPConfig,
     HFSPScheduler,
     Phase,
-    Preemption,
-    SchedulerConfig,
     Simulator,
 )
 from repro.core.vcluster import VirtualCluster, discrete_allocation
 from repro.workload import fb_cluster, fb_dataset
 
 
-def _run(name, seed, paranoid, num_jobs=30):
-    cluster = fb_cluster(num_machines=20)
-    jobs, _ = fb_dataset(seed=seed, num_jobs=num_jobs)
-    if name == "fifo":
-        sch = FIFOScheduler(cluster, SchedulerConfig(paranoid_indexes=paranoid))
-    elif name == "fair":
-        sch = FairScheduler(cluster, SchedulerConfig(paranoid_indexes=paranoid))
-    else:
-        cfg = HFSPConfig(paranoid_indexes=paranoid)
-        if name == "hfsp-kill":
-            cfg.preemption = Preemption.KILL
-        sch = HFSPScheduler(cluster, cfg)
-    res = Simulator(cluster, sch, jobs).run()
-    st = res.stats
-    return {
-        "completion": dict(res.completion),
-        "locality": (res.locality_hits, res.locality_misses),
-        "preemption": (st.suspensions, st.resumes, st.kills, st.waits),
-        "delay": st.delay_sched_waits,
-        "training": st.training_tasks,
-    }
-
-
-@pytest.mark.parametrize("name", ["fifo", "fair", "hfsp", "hfsp-kill"])
+@pytest.mark.parametrize("name", TRACE_SCHEDULERS)
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_incremental_matches_rebuild_reference(name, seed):
     """The cross-checked (rebuild-from-scratch reference) run and the
     plain incremental run must produce identical schedules.  The paranoid
     run itself asserts index equality inside every scheduling pass."""
-    fast = _run(name, seed, paranoid=False)
-    checked = _run(name, seed, paranoid=True)
-    assert fast == checked
+    fast = run_trace(name, seed, paranoid=False)
+    checked = run_trace(name, seed, paranoid=True)
+    assert_traces_equal(fast, checked)
 
 
 def test_paranoid_mode_detects_corruption():

@@ -1,0 +1,355 @@
+"""Unit tests for the jax virtual-cluster backend (repro.core.vcluster_jax)
+and the batched what-if projection API, plus the determinism guard for
+schedule_order under lazy aging (both backends).
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import ClusterSpec, HFSPConfig, HFSPScheduler, Phase, Simulator
+from repro.core.types import JobSpec, TaskSpec
+from repro.core.vcluster import (
+    VirtualCluster,
+    _project_array,
+    _water_fill,
+    resolve_backend,
+)
+from repro.workload import fb_cluster, fb_dataset
+
+jax = pytest.importorskip("jax")
+
+from repro.core import vcluster_jax  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# water_fill: jax closed form vs numpy redistribute loop
+# ---------------------------------------------------------------------------
+WATER_FILL_CASES = [
+    # (caps, weights, slots) — degenerate corners first.
+    ([], [], 10.0),                                   # empty cluster
+    ([7.0], [1.0], 10.0),                             # single job, capped
+    ([7.0], [1.0], 3.0),                              # single job, limited
+    ([3.0, 5.0], [0.0, 0.0], 8.0),                    # all weights zero
+    ([3.0, 5.0, 2.0], [0.0, 1.0, 2.0], 8.0),          # mixed zero weight
+    ([1.0, 2.0, 3.0], [1.0, 1.0, 1.0], 100.0),        # caps sum below slots
+    ([0.0, 0.0], [1.0, 1.0], 5.0),                    # zero caps
+    ([10.0, 10.0, 10.0, 10.0], [1.0, 1.0, 1.0, 1.0], 8.0),  # even split
+    ([1.0, 100.0], [1.0, 1.0], 10.0),                 # one caps out, redistribute
+    ([4.0, 4.0], [1.0, 3.0], 6.0),                    # weighted shares
+    ([5.0, 5.0], [1.0, 1.0], 0.0),                    # no slots
+]
+
+
+@pytest.mark.parametrize("caps,ws,slots", WATER_FILL_CASES)
+def test_water_fill_matches_numpy_reference(caps, ws, slots):
+    caps = np.asarray(caps, dtype=np.float64)
+    ws = np.asarray(ws, dtype=np.float64)
+    ref = _water_fill(caps, ws, slots)
+    out = vcluster_jax.water_fill(caps, ws, slots)
+    np.testing.assert_allclose(out, ref, rtol=1e-9, atol=1e-9)
+
+
+def test_water_fill_randomized_equivalence():
+    rng = np.random.default_rng(7)
+    for _ in range(100):
+        n = int(rng.integers(0, 50))
+        caps = rng.integers(0, 40, size=n).astype(np.float64)
+        ws = np.where(rng.random(n) < 0.2, 0.0, rng.uniform(0.1, 5.0, n))
+        slots = float(rng.integers(0, 120))
+        ref = _water_fill(caps, ws, slots)
+        out = vcluster_jax.water_fill(caps, ws, slots)
+        np.testing.assert_allclose(out, ref, rtol=1e-9, atol=1e-8)
+        # Feasibility invariants hold exactly in both.
+        assert (out <= caps + 1e-9).all()
+        assert out.sum() <= slots + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# PS finish-time projection: jax while_loop vs numpy event loop
+# ---------------------------------------------------------------------------
+def test_projection_matches_numpy_reference():
+    rng = np.random.default_rng(11)
+    for _ in range(60):
+        n = int(rng.integers(1, 30))
+        rem = np.where(rng.random(n) < 0.15, np.inf, rng.uniform(0.0, 400.0, n))
+        caps = rng.integers(0, 15, size=n).astype(np.float64)
+        ws = rng.uniform(0.5, 2.0, n)
+        slots = float(rng.integers(1, 30))
+        now = float(rng.uniform(0.0, 1e4))
+        ref = _project_array(rem.copy(), caps, ws, slots, now)
+        out = vcluster_jax.project_finish_times(rem, caps, ws, slots, now)
+        finite = np.isfinite(ref)
+        assert (finite == np.isfinite(out)).all()
+        np.testing.assert_allclose(out[finite], ref[finite], rtol=1e-9, atol=1e-9)
+
+
+def test_projection_batch_rows_match_single_calls():
+    """A (B, N) batch must equal B independent single projections, and
+    per-row slots/now must be honored."""
+    rng = np.random.default_rng(3)
+    b, n = 5, 12
+    rem_b = rng.uniform(1.0, 300.0, (b, n))
+    caps_b = rng.integers(1, 9, (b, n)).astype(np.float64)
+    ws_b = rng.uniform(0.5, 2.0, (b, n))
+    slots = np.array([4.0, 8.0, 16.0, 5.0, 7.0])
+    now = np.array([0.0, 10.0, 0.0, 3.5, 100.0])
+    batch = vcluster_jax.project_finish_times_batch(rem_b, caps_b, ws_b, slots, now)
+    for i in range(b):
+        single = vcluster_jax.project_finish_times(
+            rem_b[i], caps_b[i], ws_b[i], float(slots[i]), float(now[i])
+        )
+        np.testing.assert_array_equal(batch[i], single)
+
+
+def test_padding_bucket_is_bitwise_neutral():
+    """The padded-buffer contract: the same live prefix embedded in a
+    wider batch row (bigger padded bucket) produces bit-identical finish
+    times — masked padding adds exact float zeros only."""
+    rng = np.random.default_rng(5)
+    n = 6
+    rem = rng.uniform(1.0, 100.0, n)
+    caps = rng.integers(1, 6, n).astype(np.float64)
+    ws = np.ones(n)
+    single = vcluster_jax.project_finish_times(rem, caps, ws, 5.0, 1.0)
+    wide = np.zeros((2, 40))
+    wide_caps = np.zeros((2, 40))
+    wide_ws = np.zeros((2, 40))
+    wide[:, :n] = rem
+    wide_caps[:, :n] = caps
+    wide_ws[:, :n] = ws
+    batch = vcluster_jax.project_finish_times_batch(
+        wide, wide_caps, wide_ws, 5.0, 1.0, n_valid=np.array([n, n])
+    )
+    np.testing.assert_array_equal(batch[0, :n], single)
+    np.testing.assert_array_equal(batch[1, :n], single)
+
+
+def test_jit_cache_amortized_within_bucket():
+    """Job counts inside one power-of-two bucket must reuse the compiled
+    executable (the recompile-amortization contract of docs/vcluster.md)."""
+    fill = vcluster_jax._jitted()["fill"]
+    if not hasattr(fill, "_cache_size"):
+        pytest.skip("jax version without jit cache introspection")
+    for n in (17, 21, 25, 31):  # all pad to the 32 bucket
+        vcluster_jax.water_fill(np.ones(n), np.ones(n), 5.0)
+    before = fill._cache_size()
+    for n in (18, 23, 30, 32):  # still the 32 bucket
+        vcluster_jax.water_fill(np.ones(n), np.ones(n), 5.0)
+    assert fill._cache_size() == before
+
+
+# ---------------------------------------------------------------------------
+# VirtualCluster integration: backend selection + batched what-ifs
+# ---------------------------------------------------------------------------
+def test_resolve_backend_env(monkeypatch):
+    assert resolve_backend(None) == "numpy"
+    monkeypatch.setenv("REPRO_VC_BACKEND", "jax")
+    assert resolve_backend(None) == "jax"
+    assert resolve_backend("numpy") == "numpy"  # explicit arg wins
+    with pytest.raises(ValueError):
+        resolve_backend("tpu-emoji")
+
+
+def _make_vc(backend, slots=10, jobs=6):
+    vc = VirtualCluster(Phase.MAP, slots=slots, backend=backend)
+    for j in range(jobs):
+        vc.add_job(j, 40.0 + 17.0 * j, 4 + j)
+    return vc
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_projected_finish_batch_matches_set_remaining(backend):
+    """A what-if override must price exactly like actually applying
+    set_remaining to a fresh cluster."""
+    vc = _make_vc(backend)
+    scenarios = [{}, {2: 10.0}, {0: math.inf}, {4: 1.0, 5: 500.0}]
+    outs = vc.projected_finish_batch(scenarios, now=2.0)
+    assert outs[0] == vc.projected_finish(2.0)
+    for scenario, out in zip(scenarios[1:], outs[1:]):
+        ref = _make_vc(backend)
+        for j, r in scenario.items():
+            ref.set_remaining(j, r)
+        assert out == ref.projected_finish(2.0)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_projected_finish_batch_size_mode_matches_set_size(backend):
+    """as_sizes=True must price exactly like actually applying set_size
+    (remaining AND task_time/virtual-parallelism re-derived) — the
+    semantics the estimator's update path uses."""
+    vc = _make_vc(backend)
+    vc.age(3.0)  # accrue some done so size -> remaining conversion matters
+    vc.allocation()
+    scenarios = [{2: 15.0}, {0: 400.0}, {4: 9.0, 5: 700.0}]
+    outs = vc.projected_finish_batch(scenarios, now=5.0, as_sizes=True)
+    for scenario, out in zip(scenarios, outs):
+        ref = _make_vc(backend)
+        ref.age(3.0)
+        ref.allocation()
+        for j, size in scenario.items():
+            ref.set_size(j, size)
+        assert out == ref.projected_finish(5.0)
+
+
+def test_projected_finish_batch_backends_agree():
+    a = _make_vc("numpy").projected_finish_batch([{}, {1: 5.0}, {3: 1000.0}], 0.0)
+    b = _make_vc("jax").projected_finish_batch([{}, {1: 5.0}, {3: 1000.0}], 0.0)
+    for fa, fb in zip(a, b):
+        assert set(fa) == set(fb)
+        for j in fa:
+            assert fa[j] == pytest.approx(fb[j], rel=1e-9, abs=1e-9)
+
+
+def test_projected_finish_batch_empty_cases():
+    vc = VirtualCluster(Phase.MAP, slots=4, backend="jax")
+    assert vc.projected_finish_batch([], 0.0) == []
+    assert vc.projected_finish_batch([{}, {9: 3.0}], 0.0) == [{}, {}]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-level what-if APIs
+# ---------------------------------------------------------------------------
+def _tiny_job(job_id, arrival, n_map, dur):
+    return JobSpec(
+        job_id=job_id,
+        arrival_time=arrival,
+        map_tasks=tuple(
+            TaskSpec(job_id, Phase.MAP, i, dur) for i in range(n_map)
+        ),
+        reduce_tasks=(),
+    )
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_whatif_and_rank_stability(backend):
+    cluster = ClusterSpec(num_machines=4)
+    sch = HFSPScheduler(cluster, HFSPConfig(vc_backend=backend))
+    jobs = [_tiny_job(1, 0.0, 60, 30.0), _tiny_job(2, 0.0, 60, 8.0)]
+    sim = Simulator(cluster, sch, jobs)
+    try:
+        sim.run(max_events=30)
+    except Exception:
+        pass
+    now = sch._clock
+    live = [j for j in (1, 2) if j in sch.vc[Phase.MAP]]
+    assert live, "probe jobs must still be mid-flight at the event budget"
+    target = live[0]
+    outs = sch.whatif_finish_times(
+        Phase.MAP, [{}, {target: 1e-3}, {target: 1e6}], now
+    )
+    assert len(outs) == 3
+    # Near-zero remaining cannot finish later than the huge-size scenario.
+    assert outs[1][target] <= outs[2][target]
+    ranks = sch.rank_stability(target, Phase.MAP, now)
+    assert all(0 <= r < len(sch.vc[Phase.MAP].jobs) for r in ranks)
+
+
+def test_rank_stability_spans_candidate_estimates():
+    """With wildly different sample durations the leave-one-out candidate
+    sizes differ, and every candidate must price as a valid position."""
+    cluster = ClusterSpec(num_machines=2)
+    sch = HFSPScheduler(cluster, HFSPConfig(vc_backend="numpy"))
+    jobs = [_tiny_job(1, 0.0, 10, 5.0), _tiny_job(2, 0.0, 10, 5.0)]
+    sim = Simulator(cluster, sch, jobs)
+    try:
+        sim.run(max_events=60)
+    except Exception:
+        pass
+    for jid in (1, 2):
+        js = sch.jobs.get(jid)
+        if js is None or jid not in sch.vc[Phase.MAP]:
+            continue
+        sizes = sch.training.candidate_sizes(js, Phase.MAP)
+        ranks = sch.rank_stability(jid, Phase.MAP, sch._clock)
+        assert len(ranks) == len(sizes)
+
+
+# ---------------------------------------------------------------------------
+# Determinism of schedule_order under lazy aging (regression guard for the
+# PR 1 deferred-dt replay): materialization *timing* must be unobservable.
+# ---------------------------------------------------------------------------
+def _random_ops(rng, n_jobs, n_ops):
+    """Mutating op sequence + fixed schedule_order checkpoints."""
+    ops = []
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.5:
+            ops.append(("age", float(rng.uniform(0.01, 5.0))))
+        elif r < 0.75:
+            ops.append(
+                ("set_remaining", int(rng.integers(0, n_jobs)),
+                 float(rng.uniform(0.0, 200.0)))
+            )
+        elif r < 0.9:
+            ops.append(
+                ("set_size", int(rng.integers(0, n_jobs)),
+                 float(rng.uniform(1.0, 300.0)))
+            )
+        else:
+            ops.append(("order",))  # checkpoint: query schedule_order
+    ops.append(("order",))
+    return ops
+
+
+def _execute(ops, backend, query_mask, n_jobs=5, slots=7):
+    """Run the op sequence; query_mask[i] inserts *pure* state queries
+    after op i (forcing the deferred-aging replay at that point)."""
+    vc = VirtualCluster(Phase.MAP, slots=slots, backend=backend)
+    for j in range(n_jobs):
+        vc.add_job(j, 30.0 * (j + 1), 3 + j)
+    now = 0.0
+    orders = []
+    for i, op in enumerate(ops):
+        if op[0] == "age":
+            now += op[1]
+            vc.age(op[1])
+        elif op[0] == "set_remaining":
+            vc.set_remaining(op[1], op[2])
+        elif op[0] == "set_size":
+            vc.set_size(op[1], op[2])
+        else:
+            orders.append(tuple(vc.schedule_order(now)))
+        if query_mask[i]:
+            # Pure queries: allowed to flush deferred aging, must change
+            # nothing observable downstream.
+            vc.remaining(i % n_jobs)
+            vc.allocation()
+            _ = vc.jobs[i % n_jobs].effective_cap()
+    state = {
+        j: (vc.remaining(j), vc.jobs[j].done) for j in range(n_jobs) if j in vc
+    }
+    return orders, state, vc.allocation()
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_schedule_order_deterministic_under_lazy_aging(backend):
+    rng = np.random.default_rng(42)
+    for trial in range(8):
+        ops = _random_ops(rng, n_jobs=5, n_ops=25)
+        masks = [
+            [False] * len(ops),                     # fully deferred
+            [True] * len(ops),                      # eager flush everywhere
+            list(rng.random(len(ops)) < 0.4),       # random interleaving
+            list(rng.random(len(ops)) < 0.4),
+        ]
+        results = [_execute(ops, backend, m) for m in masks]
+        ref_orders, ref_state, ref_alloc = results[0]
+        for orders, state, alloc in results[1:]:
+            assert orders == ref_orders, f"trial {trial}: orders diverge"
+            assert state == ref_state, f"trial {trial}: aged state diverges"
+            assert alloc == ref_alloc, f"trial {trial}: allocation diverges"
+
+
+def test_schedule_order_backends_agree_on_op_sequences():
+    """The same op sequence must yield the same checkpoint orders on both
+    backends (vcluster-level conformance, independent of the simulator)."""
+    rng = np.random.default_rng(99)
+    for trial in range(5):
+        ops = _random_ops(rng, n_jobs=5, n_ops=20)
+        mask = [False] * len(ops)
+        orders_np, _, alloc_np = _execute(ops, "numpy", mask)
+        orders_jx, _, alloc_jx = _execute(ops, "jax", mask)
+        assert orders_np == orders_jx, f"trial {trial}"
+        assert alloc_np == alloc_jx, f"trial {trial}"

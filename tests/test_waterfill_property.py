@@ -1,0 +1,71 @@
+"""Hypothesis property tests: the jax water_fill is allocation-equivalent
+to the numpy reference loop over the whole (caps, weights, slots) space,
+degenerate corners included.
+
+Skips cleanly when hypothesis or jax is unavailable (see
+requirements-dev.txt); the fixed-case coverage in tests/test_vcluster_jax.py
+still runs there.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+pytest.importorskip("jax")
+
+from hypothesis import example, given, settings, strategies as st  # noqa: E402
+
+from repro.core import vcluster_jax  # noqa: E402
+from repro.core.vcluster import _water_fill  # noqa: E402
+
+# Bounded, sane magnitudes: the virtual cluster feeds task counts (caps),
+# GPS weights, and slot counts — never denormals or 1e300-scale values.
+_cap = st.floats(min_value=0.0, max_value=1e4, allow_nan=False, width=64)
+_weight = st.one_of(
+    st.just(0.0),  # zero-weight jobs must starve identically
+    st.floats(min_value=1e-3, max_value=100.0, allow_nan=False, width=64),
+)
+
+
+@st.composite
+def fill_problem(draw):
+    n = draw(st.integers(min_value=0, max_value=24))
+    caps = draw(
+        st.lists(_cap, min_size=n, max_size=n).map(
+            lambda xs: np.asarray(xs, dtype=np.float64)
+        )
+    )
+    ws = draw(
+        st.lists(_weight, min_size=n, max_size=n).map(
+            lambda xs: np.asarray(xs, dtype=np.float64)
+        )
+    )
+    slots = draw(st.floats(min_value=0.0, max_value=2e4, allow_nan=False, width=64))
+    return caps, ws, slots
+
+
+@settings(max_examples=150, deadline=None)  # first examples pay jit compiles
+@given(fill_problem())
+@example((np.zeros(0), np.zeros(0), 16.0))              # empty cluster
+@example((np.array([9.0]), np.array([1.0]), 4.0))       # single job
+@example((np.array([3.0, 5.0]), np.array([0.0, 0.0]), 8.0))   # zero weights
+@example((np.array([1.0, 2.0]), np.array([1.0, 1.0]), 1e4))   # caps << slots
+@example((np.array([0.0, 7.0]), np.array([2.0, 0.0]), 5.0))   # disjoint degeneracy
+def test_water_fill_jax_equivalent_to_numpy(problem):
+    caps, ws, slots = problem
+    ref = _water_fill(caps, ws, slots)
+    out = vcluster_jax.water_fill(caps, ws, slots)
+    assert out.shape == ref.shape
+    # Allocation equivalence: identical up to float-associativity noise
+    # (the two algorithms order the arithmetic differently).
+    np.testing.assert_allclose(out, ref, rtol=1e-9, atol=1e-6)
+    # Both must satisfy the water-fill feasibility invariants exactly.
+    for alloc in (ref, out):
+        assert (alloc >= -1e-9).all()
+        assert (alloc <= caps + 1e-6).all()
+        assert alloc.sum() <= slots + 1e-6
+        # Zero-weight jobs are starved (Sect. 5 GPS weights semantics).
+        # Near-zero, not exact: the numpy loop's capping tolerance can
+        # hand a zero-weight job its cap when that cap is itself <= 1e-12.
+        if len(alloc):
+            assert (np.abs(alloc[ws == 0.0]) <= 1e-9).all()
