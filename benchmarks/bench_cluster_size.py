@@ -1,15 +1,27 @@
 """Fig. 5 — mean sojourn vs cluster size (10..100 machines), FAIR vs HFSP.
 
 Paper claim: when resources are scarce, HFSP's advantage grows — the same
-workload needs a smaller cluster for equal sojourn times."""
+workload needs a smaller cluster for equal sojourn times.
+
+Thin wrapper over the ``paper-cluster-size`` scenario preset."""
 
 from __future__ import annotations
 
-from benchmarks.common import CsvOut, run_fb
+from benchmarks.common import CsvOut
+from repro.scenarios import get_preset, run_sweep
+from repro.scenarios.spec import parse_cell_id
 
 
 def main(out=None) -> dict:
-    sizes = [10, 20, 30, 50, 70, 100]
+    results = run_sweep(get_preset("paper-cluster-size"))
+
+    # cell_id = "cluster.num_machines=<m>,scheduler.policy=<name>"
+    by_cell: dict[tuple[int, str], dict] = {}
+    for cid, rep in results.items():
+        kv = parse_cell_id(cid)
+        by_cell[(int(kv["cluster.num_machines"]), kv["scheduler.policy"])] = rep
+
+    sizes = sorted({m for m, _ in by_cell})
     table = CsvOut("fig5_cluster_size", [
         "machines", "scheduler", "mean_sojourn_s", "makespan_s",
     ])
@@ -17,9 +29,9 @@ def main(out=None) -> dict:
     for m in sizes:
         means = {}
         for name in ("fair", "hfsp"):
-            res, _, _, _ = run_fb(name, machines=m, seed=0)
-            means[name] = res.mean_sojourn()
-            table.add(m, name, round(means[name], 1), round(res.makespan, 1))
+            rep = by_cell[(m, name)]
+            means[name] = rep["mean_sojourn_s"]
+            table.add(m, name, round(means[name], 1), round(rep["makespan_s"], 1))
         gains[m] = means["fair"] / means["hfsp"]
     table.emit(out)
     print("# fig5: FAIR/HFSP mean-sojourn ratio by cluster size: "

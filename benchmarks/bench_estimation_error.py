@@ -3,72 +3,55 @@
 A "wrong" estimate is drawn uniformly in [s*(1-a), s*(1+a)] for
 a in [0.1, 1.0]; the paper uses a MAP-only variant of the FB-dataset and
 finds mean sojourn nearly flat in a (HFSP is robust), with FAIR as the
-error-independent reference."""
+error-independent reference.
+
+Thin wrapper over the ``paper-estimation-error`` scenario preset — the
+alpha x error-seed grid plus the FAIR reference cell are declared there;
+this module only averages the per-cell reports over error seeds."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import CsvOut, run_fb
-from repro.workload import WorkloadSpec
+from benchmarks.common import CsvOut
+from repro.scenarios import get_preset, run_sweep
+from repro.scenarios.spec import parse_cell_id
 
 
-def _map_only_spec():
-    return WorkloadSpec()
+def main(out=None) -> dict:
+    results = run_sweep(get_preset("paper-estimation-error"))
 
+    # hfsp cells: "scheduler.error_alpha=<a>,scheduler.error_seed=<s>";
+    # the FAIR reference cell: "scheduler.policy=fair".
+    by_alpha: dict[float, list[float]] = {}
+    fair = None
+    for cid, rep in results.items():
+        kv = parse_cell_id(cid)
+        if kv.get("scheduler.policy") == "fair":
+            fair = rep["mean_sojourn_s"]
+        else:
+            a = float(kv["scheduler.error_alpha"])
+            by_alpha.setdefault(a, []).append(rep["mean_sojourn_s"])
 
-def main(out=None, seeds: int = 5) -> dict:
-    import dataclasses
-
-    from repro.workload import fb_dataset
-
-    # MAP-only FB variant (paper Sect. 4.3): strip reduce tasks.
-    alphas = [0.0, 0.1, 0.25, 0.5, 0.75, 1.0]
     table = CsvOut("fig6_estimation_error", [
         "alpha", "mean_sojourn_s", "std_over_seeds",
     ])
-
-    def run_alpha(alpha: float) -> list[float]:
-        from repro.core import HFSPConfig, HFSPScheduler, Simulator
-        from repro.workload import fb_cluster
-
-        means = []
-        for seed in range(seeds):
-            cluster = fb_cluster(100)
-            jobs, _ = fb_dataset(seed=0)
-            jobs = [
-                dataclasses.replace(j, reduce_tasks=()) for j in jobs
-            ]
-            sch = HFSPScheduler(
-                cluster, HFSPConfig(error_alpha=alpha, error_seed=seed)
-            )
-            res = Simulator(cluster, sch, jobs).run()
-            means.append(res.mean_sojourn())
-        return means
-
-    results = {}
-    for a in alphas:
-        ms = run_alpha(a)
-        results[a] = float(np.mean(ms))
+    res = {}
+    for a in sorted(by_alpha):
+        ms = by_alpha[a]
+        res[a] = float(np.mean(ms))
         table.add(a, round(float(np.mean(ms)), 1), round(float(np.std(ms)), 1))
-
-    # FAIR reference (error-independent).
-    from repro.core import FairScheduler, Simulator
-    from repro.workload import fb_cluster, fb_dataset as fbd
-
-    cluster = fb_cluster(100)
-    jobs, _ = fbd(seed=0)
-    jobs = [dataclasses.replace(j, reduce_tasks=()) for j in jobs]
-    fair = Simulator(cluster, FairScheduler(cluster), jobs).run().mean_sojourn()
     table.add("fair-ref", round(fair, 1), 0.0)
     table.emit(out)
 
-    degradation = results[1.0] / results[0.0]
-    print(f"# fig6: mean sojourn at alpha=0: {results[0.0]:.0f}s, at "
-          f"alpha=1: {results[1.0]:.0f}s ({degradation:.2f}x) — "
+    alphas = sorted(res)
+    lo, hi = min(alphas), max(alphas)
+    degradation = res[hi] / res[lo]
+    print(f"# fig6: mean sojourn at alpha={lo:g}: {res[lo]:.0f}s, at "
+          f"alpha={hi:g}: {res[hi]:.0f}s ({degradation:.2f}x) — "
           f"FAIR ref {fair:.0f}s; HFSP stays below FAIR for all alpha: "
-          f"{all(results[a] < fair for a in alphas)}")
-    return {"results": results, "fair": fair}
+          f"{all(res[a] < fair for a in alphas)}")
+    return {"results": res, "fair": fair}
 
 
 if __name__ == "__main__":

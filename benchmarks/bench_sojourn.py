@@ -3,39 +3,38 @@
 Paper claims to validate:
 * HFSP ~= FAIR for small jobs, significantly shorter for medium/large;
 * FIFO mean sojourn is a multiple (paper: ~5x) of HFSP's.
+
+Thin wrapper over the ``paper-fb`` scenario preset (the Sect. 4
+experiment matrix lives in :mod:`repro.scenarios.presets`); this module
+only formats the expanded cells' reports as the fig3 CSV blocks.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import CsvOut, run_fb
-from repro.core.metrics import ecdf, per_class_sojourns, summarize
+from benchmarks.common import CsvOut
+from repro.scenarios import get_preset, run_sweep
 
 
 def main(out=None) -> dict:
+    results = run_sweep(get_preset("paper-fb"))
+
     table = CsvOut("fig3_sojourn", [
         "scheduler", "class", "mean_s", "median_s", "p95_s", "count",
     ])
-    means = {}
-    per_class = {}
-    for name in ("fifo", "fair", "hfsp"):
-        res, class_of, sch, wall = run_fb(name, seed=0)
-        summ = summarize(res, class_of)
-        for cls, s in summ.items():
-            table.add(name, cls, round(s.mean, 1), round(s.median, 1),
-                      round(s.p95, 1), s.count)
-        means[name] = summ["all"].mean
-        per_class[name] = per_class_sojourns(res, class_of)
-    table.emit(out)
-
-    # ECDF quartiles for the figure (printed compactly).
     q = CsvOut("fig3_ecdf", ["scheduler", "class", "p25_s", "p50_s", "p75_s", "p90_s"])
-    for name, pc in per_class.items():
-        for cls, vals in sorted(pc.items()):
-            xs = np.asarray(vals)
-            q.add(name, cls, *[round(float(np.percentile(xs, p)), 1)
-                               for p in (25, 50, 75, 90)])
+    means = {}
+    for cid, rep in results.items():
+        name = cid.split("=", 1)[1]  # scheduler.policy=<name>
+        classes = dict(rep["per_class"])
+        classes["all"] = rep["sojourn"]
+        for cls, s in sorted(classes.items()):
+            table.add(name, cls, round(s["mean_s"], 1), round(s["median_s"], 1),
+                      round(s["p95_s"], 1), s["count"])
+            if cls != "all":
+                e = s["ecdf"]
+                q.add(name, cls, *[round(e[f"p{p}"], 1) for p in (25, 50, 75, 90)])
+        means[name] = rep["mean_sojourn_s"]
+    table.emit(out)
     q.emit(out)
 
     ratio = means["fifo"] / means["hfsp"]

@@ -58,7 +58,10 @@ def quick_sched_wall(json_path: str | None = None, seed: int = 0) -> dict:
     a completion fingerprint (so a perf regression AND a behaviour change
     are both visible in the trajectory file), plus the water-fill kernel
     microbenchmark at the 5000-job cell (numpy loop vs jitted jax backend,
-    see benchmarks/bench_sched_overhead.py).
+    see benchmarks/bench_sched_overhead.py), plus the reduced-scale
+    ``paper-fb`` scenario smoke sweep (all three schedulers on one small
+    FB trace) whose per-scenario mean sojourns let scripts/bench_gate.py
+    track *policy-level* regressions across PRs, not just wall-clock.
     """
     from benchmarks.common import CsvOut, run_fb
 
@@ -70,9 +73,11 @@ def quick_sched_wall(json_path: str | None = None, seed: int = 0) -> dict:
         "python": platform.python_version(),
         "schedulers": {},
     }
+    from repro.scenarios.report import completion_fingerprint
+
     for name in QUICK_SCHEDULERS:
         res, _, _, wall = run_fb(name, seed=seed)
-        fingerprint = hash(tuple(sorted(res.completion.items())))
+        fingerprint = completion_fingerprint(res)
         out.add(name, round(wall, 3), round(res.mean_sojourn(), 2), fingerprint)
         record["schedulers"][name] = {
             "wall_s": round(wall, 3),
@@ -93,11 +98,41 @@ def quick_sched_wall(json_path: str | None = None, seed: int = 0) -> dict:
            else "jax unavailable"),
         flush=True,
     )
+    record["scenarios"] = scenario_smoke()
     if json_path:
         with open(json_path, "w") as f:
             json.dump(record, f, indent=2, sort_keys=True)
         print(f"# wrote {json_path}")
     return record
+
+
+def scenario_smoke() -> dict:
+    """The fast scenario smoke sweep: ``paper-fb`` at reduced scale, all
+    three schedulers on one trace.  Returns per-scenario mean sojourn +
+    completion fingerprint, keyed ``paper-fb@quick/<policy>`` — the
+    policy-level trajectory scripts/bench_gate.py gates on.
+    """
+    from repro.scenarios import get_preset, quick_sweep, run_sweep
+
+    sweep = quick_sweep(get_preset("paper-fb"))
+    results = run_sweep(sweep)
+    out: dict = {}
+    means: dict = {}
+    for cid, rep in sorted(results.items()):
+        policy = cid.split("=", 1)[1]
+        means[policy] = rep["mean_sojourn_s"]
+        out[f"{sweep.name}/{policy}"] = {
+            "mean_sojourn_s": round(rep["mean_sojourn_s"], 2),
+            "completion_fingerprint": rep["completion_fingerprint"],
+        }
+    hfsp_lowest = means["hfsp"] < min(means["fair"], means["fifo"])
+    print(
+        "# scenario smoke (paper-fb@quick): "
+        + " ".join(f"{p}={means[p]:.0f}s" for p in ("fifo", "fair", "hfsp"))
+        + f"; hfsp strictly lowest: {hfsp_lowest}",
+        flush=True,
+    )
+    return out
 
 
 def main() -> None:

@@ -5,15 +5,25 @@ automatically").
 
 Reads the record ``benchmarks/run.py --quick --json`` just wrote, appends
 it (timestamped, with its verdict) to a JSONL history file, and fails
-when the hfsp wall-clock regressed more than ``--threshold`` (default
-25%) versus the baseline.  The baseline is the most recent entry that
-did NOT itself fail the gate — a regressed run is recorded for the
-trajectory but never becomes the baseline, so re-running the gate after
-a failure cannot silently ratchet the regression in.
+when
+
+* the hfsp wall-clock regressed more than ``--threshold`` (default 25%)
+  versus the baseline, or
+* any scenario-smoke cell's mean sojourn (the ``scenarios`` block:
+  ``paper-fb@quick/<policy>``) worsened more than ``--sojourn-threshold``
+  (default 10%) versus the baseline — a *policy-level* regression gate:
+  a scheduler edit that silently degrades scheduling quality fails here
+  even if it runs faster.
+
+The baseline is the most recent entry that did NOT itself fail the gate —
+a regressed run is recorded for the trajectory but never becomes the
+baseline, so re-running the gate after a failure cannot silently ratchet
+the regression in.
 
 Usage (scripts/check.sh runs this after the quick bench):
   python scripts/bench_gate.py [--json BENCH_sched.json] \
-      [--history BENCH_history.jsonl] [--threshold 0.25] [--key hfsp]
+      [--history BENCH_history.jsonl] [--threshold 0.25] [--key hfsp] \
+      [--sojourn-threshold 0.10]
 """
 
 from __future__ import annotations
@@ -25,11 +35,33 @@ import time
 from pathlib import Path
 
 
+def sojourn_regressions(
+    record: dict, baseline: dict, threshold: float
+) -> list[str]:
+    """Scenario-smoke cells whose mean sojourn worsened past threshold.
+
+    Only cells present in BOTH records are compared (a renamed or newly
+    added scenario has no baseline to regress against).
+    """
+    out = []
+    new_s, old_s = record.get("scenarios", {}), baseline.get("scenarios", {})
+    for cell in sorted(set(new_s) & set(old_s)):
+        new_m = new_s[cell]["mean_sojourn_s"]
+        old_m = old_s[cell]["mean_sojourn_s"]
+        if old_m > 0 and new_m > old_m * (1.0 + threshold):
+            out.append(
+                f"{cell}: mean sojourn {old_m:.1f}s -> {new_m:.1f}s "
+                f"({new_m / old_m - 1.0:+.1%})"
+            )
+    return out
+
+
 def gate(
     json_path: str = "BENCH_sched.json",
     history_path: str = "BENCH_history.jsonl",
     threshold: float = 0.25,
     key: str = "hfsp",
+    sojourn_threshold: float = 0.10,
 ) -> int:
     record = dict(json.loads(Path(json_path).read_text()))
     history = Path(history_path)
@@ -56,21 +88,42 @@ def gate(
         return 0
     old_wall = baseline["schedulers"][key]["wall_s"]
     limit = old_wall * (1.0 + threshold)
-    verdict = "OK" if new_wall <= limit else "REGRESSION"
+    wall_ok = new_wall <= limit
+    sojourn_bad = sojourn_regressions(record, baseline, sojourn_threshold)
+    verdict = "OK" if wall_ok and not sojourn_bad else "REGRESSION"
     record["gate"] = verdict.lower()
     with history.open("a") as f:
         f.write(json.dumps(record, sort_keys=True) + "\n")
     print(
         f"bench_gate: {key} wall {old_wall:.3f}s -> {new_wall:.3f}s "
-        f"(limit {limit:.3f}s, +{threshold:.0%}): {verdict}"
+        f"(limit {limit:.3f}s, +{threshold:.0%}): "
+        f"{'OK' if wall_ok else 'REGRESSION'}"
     )
+    n_cells = len(
+        set(record.get("scenarios", {})) & set(baseline.get("scenarios", {}))
+    )
+    print(
+        f"bench_gate: scenario sojourns ({n_cells} comparable cells, "
+        f"+{sojourn_threshold:.0%} limit): "
+        f"{'OK' if not sojourn_bad else 'REGRESSION'}"
+    )
+    for line in sojourn_bad:
+        print(f"bench_gate:   {line}")
     if verdict != "OK":
-        print(
-            f"bench_gate: {key} wall-clock regressed "
-            f"{new_wall / old_wall - 1.0:+.1%} vs the previous entry in "
-            f"{history_path}; investigate before merging (or delete the "
-            f"stale entry if the machine changed)."
-        )
+        if not wall_ok:
+            print(
+                f"bench_gate: {key} wall-clock regressed "
+                f"{new_wall / old_wall - 1.0:+.1%} vs the previous entry in "
+                f"{history_path}; investigate before merging (or delete the "
+                f"stale entry if the machine changed)."
+            )
+        if sojourn_bad:
+            print(
+                "bench_gate: scheduling-quality (mean sojourn) regressed on "
+                "the scenario smoke sweep — a policy change, not noise "
+                "(the simulation is deterministic); investigate before "
+                "merging."
+            )
         return 1
     return 0
 
@@ -81,8 +134,14 @@ def main() -> None:
     ap.add_argument("--history", default="BENCH_history.jsonl")
     ap.add_argument("--threshold", type=float, default=0.25)
     ap.add_argument("--key", default="hfsp")
+    ap.add_argument("--sojourn-threshold", type=float, default=0.10)
     args = ap.parse_args()
-    sys.exit(gate(args.json, args.history, args.threshold, args.key))
+    sys.exit(
+        gate(
+            args.json, args.history, args.threshold, args.key,
+            args.sojourn_threshold,
+        )
+    )
 
 
 if __name__ == "__main__":

@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
-# One-command gate: tier-1 tests + the quick scheduler benchmark + the
-# perf-trajectory gate (appends BENCH_sched.json to BENCH_history.jsonl
-# and fails on a >25% hfsp wall-clock regression vs the previous entry).
+# One-command gate: tier-1 tests + the quick scheduler benchmark (which
+# includes the paper-fb@quick scenario smoke sweep: all three schedulers
+# on one reduced-scale FB trace) + the perf-trajectory gate (appends
+# BENCH_sched.json to BENCH_history.jsonl and fails on a >25% hfsp
+# wall-clock regression OR a >10% per-scenario mean-sojourn regression —
+# policy-level quality, not just speed — vs the previous entry).
 #
 #   scripts/check.sh            # tests + quick bench + trajectory gate
 #   scripts/check.sh --no-bench # tests only

@@ -92,6 +92,7 @@ from repro.core.types import (
     TaskAttempt,
     TaskState,
 )
+from repro.core import vcluster
 from repro.core.vcluster import VirtualCluster
 
 
@@ -114,9 +115,14 @@ class HFSPConfig(SchedulerConfig):
     # in [size*(1-alpha), size*(1+alpha)].
     error_alpha: float = 0.0
     error_seed: int = 0
-    # Virtual-cluster numeric backend ("numpy" | "jax"); None defers to
-    # $REPRO_VC_BACKEND, then the numpy reference (see docs/vcluster.md).
+    # Virtual-cluster numeric backend ("numpy" | "jax" | "auto"); None
+    # defers to $REPRO_VC_BACKEND, then "auto" — numpy kernels that latch
+    # to jax once a phase's live-job count reaches vc_auto_threshold
+    # (see docs/vcluster.md; the backends are conformance-tested
+    # bit-identical, so the switch is behavior-neutral).
     vc_backend: str | None = None
+    # Live-job threshold for the "auto" backend's numpy->jax latch.
+    vc_auto_threshold: int = vcluster.AUTO_JAX_THRESHOLD
 
 
 class HFSPScheduler(Scheduler):
@@ -134,7 +140,10 @@ class HFSPScheduler(Scheduler):
         )
         self.vc: dict[Phase, VirtualCluster] = {
             p: VirtualCluster(
-                phase=p, slots=cluster.slots(p), backend=cfg.vc_backend
+                phase=p,
+                slots=cluster.slots(p),
+                backend=cfg.vc_backend,
+                auto_threshold=cfg.vc_auto_threshold,
             )
             for p in (Phase.MAP, Phase.REDUCE)
         }

@@ -54,3 +54,42 @@ def per_job_delta(a: SimResult, b: SimResult) -> dict[int, float]:
     """sojourn_a - sojourn_b per job (positive = b is better), Fig. 4."""
     sa, sb = a.sojourn, b.sojourn
     return {j: sa[j] - sb[j] for j in sa if j in sb}
+
+
+#: Percentiles reported by scenario reports (compact ECDF summary).
+ECDF_PERCENTILES = (5, 25, 50, 75, 90, 95, 99)
+
+
+def ecdf_quantiles(
+    values: list[float], percentiles: tuple[int, ...] = ECDF_PERCENTILES
+) -> dict[str, float]:
+    """Compact machine-readable ECDF: {"p50": ..., "p95": ...}.
+
+    The full :func:`ecdf` is exact but O(n) wide; scenario reports store
+    these fixed quantiles instead so cross-PR JSON diffs stay readable.
+    """
+    if not values:
+        return {f"p{p}": 0.0 for p in percentiles}
+    a = np.asarray(values, dtype=np.float64)
+    return {
+        f"p{p}": float(np.percentile(a, p)) for p in percentiles
+    }
+
+
+def slowdowns(
+    result: SimResult, size_of: dict[int, float]
+) -> dict[int, float]:
+    """Per-job slowdown: sojourn / serialized size.
+
+    ``size_of`` maps job_id -> serialized job size (sum of task runtimes
+    on one slot — the paper's size notion, Sect. 3.1).  A job whose
+    sojourn equals its serialized size ran as if alone on one slot;
+    values below 1 reflect parallel speedup, large values reflect
+    queueing.  Jobs with non-positive size are skipped.
+    """
+    out: dict[int, float] = {}
+    for jid, s in result.sojourn.items():
+        size = size_of.get(jid, 0.0)
+        if size > 0:
+            out[jid] = s / size
+    return out

@@ -56,20 +56,40 @@ import numpy as np
 
 from repro.core.types import Phase
 
-#: Recognized numeric backends for the water-fill / projection kernels.
+#: Recognized numeric kernel backends for water-fill / projection.
 #: "numpy" is the scalar reference; "jax" is the jitted fixed-shape
 #: implementation in :mod:`repro.core.vcluster_jax` (see docs/vcluster.md).
 BACKENDS = ("numpy", "jax")
 
+#: Selectable backend choices: the kernel backends plus "auto", which
+#: starts on numpy and latches to jax once the live-job count crosses
+#: :data:`AUTO_JAX_THRESHOLD` (the jitted kernels win only at scale —
+#: below it, dispatch overhead dominates; see bench_sched_overhead's
+#: waterfill_micro).  The switch is behavior-neutral: the backends are
+#: conformance-tested bit-identical (tests/test_conformance.py).
+BACKEND_CHOICES = BACKENDS + ("auto",)
+
 #: Environment override for the default backend (documented in ROADMAP.md).
 BACKEND_ENV = "REPRO_VC_BACKEND"
 
+#: Live jobs (per phase) above which an "auto" cluster switches its
+#: kernels to jax.  ~500 is where the jitted projection pulls >5x ahead
+#: of the numpy loop on the scheduler-overhead grid (ROADMAP, PR 2).
+AUTO_JAX_THRESHOLD = 500
+
 
 def resolve_backend(backend: str | None = None) -> str:
-    """Pick the kernel backend: explicit arg > $REPRO_VC_BACKEND > numpy."""
-    b = backend or os.environ.get(BACKEND_ENV) or "numpy"
-    if b not in BACKENDS:
-        raise ValueError(f"unknown vcluster backend {b!r}; expected one of {BACKENDS}")
+    """Pick the backend: explicit arg > $REPRO_VC_BACKEND > auto.
+
+    Returns one of :data:`BACKEND_CHOICES`.  "jax" raises if jax is not
+    importable (an explicit request must not silently degrade); "auto"
+    never raises — without jax it simply stays on numpy.
+    """
+    b = backend or os.environ.get(BACKEND_ENV) or "auto"
+    if b not in BACKEND_CHOICES:
+        raise ValueError(
+            f"unknown vcluster backend {b!r}; expected one of {BACKEND_CHOICES}"
+        )
     if b == "jax":
         from repro.core import vcluster_jax
 
@@ -256,12 +276,31 @@ def _project_array(
 class VirtualCluster:
     """Mirror of the real cluster for one phase (Sect. 3.1)."""
 
-    def __init__(self, phase: Phase, slots: int, backend: str | None = None):
+    def __init__(
+        self,
+        phase: Phase,
+        slots: int,
+        backend: str | None = None,
+        auto_threshold: int = AUTO_JAX_THRESHOLD,
+    ):
         self.phase = phase
         self.slots = slots
+        choice = resolve_backend(backend)
         #: Numeric backend for water-fill/projection kernels ("numpy" or
-        #: "jax"); resolved once at construction (see resolve_backend).
-        self.backend = resolve_backend(backend)
+        #: "jax").  With choice "auto" this starts as "numpy" and latches
+        #: to "jax" the first time the live-job count reaches
+        #: ``auto_threshold`` (see _maybe_auto_upgrade) — latched, not
+        #: hysteretic, so one crossing cannot thrash jit recompiles.
+        if choice == "auto":
+            self.backend = "numpy"
+            # Whether jax is importable is probed lazily, at the first
+            # threshold crossing — small clusters that never reach it
+            # must not pay the (multi-second, per-process) jax import.
+            self._auto_jax = True
+        else:
+            self.backend = choice
+            self._auto_jax = False
+        self.auto_threshold = auto_threshold
         self._jobs: dict[int, _VJob] = {}
         self._alloc_cache: dict[int, int] | None = None
         # Allocated (vjob, slots) pairs with slots > 0 — the only jobs
@@ -306,8 +345,24 @@ class VirtualCluster:
             task_time=max(tt, 1e-9),
             owner=self,
         )
+        self._maybe_auto_upgrade()
         self._invalidate_alloc()
         self._invalidate_order()
+
+    def _maybe_auto_upgrade(self) -> None:
+        """auto mode: latch numpy -> jax once live jobs reach the
+        threshold.  Membership growth is the only path that can cross it,
+        so this is checked on add_job only.  Behavior-neutral by the
+        backend conformance contract (bit-identical kernels).  Without
+        jax the first crossing disarms auto mode and the cluster stays
+        on numpy (auto never raises — only an explicit "jax" request
+        does)."""
+        if self._auto_jax and len(self._jobs) >= self.auto_threshold:
+            self._auto_jax = False
+            from repro.core import vcluster_jax
+
+            if vcluster_jax.have_jax():
+                self.backend = "jax"
 
     def remove_job(self, job_id: int) -> None:
         self._materialize()

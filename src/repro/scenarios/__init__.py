@@ -1,0 +1,53 @@
+"""Scenario engine: declarative experiment matrix, trace replay, sweeps.
+
+The subsystem that owns "an experiment" (see docs/scenarios.md):
+
+* :mod:`repro.scenarios.spec`    — ScenarioSpec / SweepSpec (the axes);
+* :mod:`repro.scenarios.presets` — named sweeps (the paper's matrix);
+* :mod:`repro.scenarios.trace`   — versioned JSONL trace export/replay;
+* :mod:`repro.scenarios.runner`  — one cell -> simulator -> report;
+* :mod:`repro.scenarios.sweep`   — parallel, resumable grid execution;
+* :mod:`repro.scenarios.report`  — machine-readable JSON reductions.
+
+CLI: ``python -m repro.scenarios run paper-fb --quick``.
+"""
+
+from repro.scenarios.presets import (
+    get_preset,
+    list_presets,
+    paper_fb_base,
+    quick_sweep,
+    register_preset,
+)
+from repro.scenarios.report import matrix_report, scenario_report
+from repro.scenarios.runner import run_scenario, simulate
+from repro.scenarios.spec import (
+    ClusterAxis,
+    ScenarioSpec,
+    SchedulerAxis,
+    SweepSpec,
+    WorkloadAxis,
+)
+from repro.scenarios.sweep import ResultStore, run_sweep
+from repro.scenarios.trace import export_trace, load_trace
+
+__all__ = [
+    "ClusterAxis",
+    "ResultStore",
+    "ScenarioSpec",
+    "SchedulerAxis",
+    "SweepSpec",
+    "WorkloadAxis",
+    "export_trace",
+    "get_preset",
+    "list_presets",
+    "load_trace",
+    "matrix_report",
+    "paper_fb_base",
+    "quick_sweep",
+    "register_preset",
+    "run_scenario",
+    "run_sweep",
+    "scenario_report",
+    "simulate",
+]

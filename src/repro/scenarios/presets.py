@@ -1,0 +1,168 @@
+"""Named scenario presets — the paper's evaluation matrix (Sect. 4).
+
+Each preset is a :class:`~repro.scenarios.spec.SweepSpec` factory; the
+registry maps the name you pass to ``python -m repro.scenarios run`` to
+the sweep it expands into.  Presets are plain data: benchmarks
+(``benchmarks/bench_sojourn.py`` etc.) expand the same presets instead of
+hand-rolling their own simulate-and-summarize loops.
+
+Register project-specific presets with :func:`register_preset`::
+
+    @register_preset("my-experiment")
+    def _my_experiment() -> SweepSpec:
+        ...
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.scenarios.spec import (
+    ClusterAxis,
+    ScenarioSpec,
+    SchedulerAxis,
+    SweepSpec,
+    WorkloadAxis,
+)
+
+_PRESETS: dict[str, Callable[[], SweepSpec]] = {}
+
+
+def register_preset(name: str):
+    """Decorator: register a SweepSpec factory under ``name``."""
+
+    def deco(fn: Callable[[], SweepSpec]):
+        _PRESETS[name] = fn
+        return fn
+
+    return deco
+
+
+def list_presets() -> list[str]:
+    return sorted(_PRESETS)
+
+
+def get_preset(name: str) -> SweepSpec:
+    try:
+        factory = _PRESETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown preset {name!r}; available: {', '.join(list_presets())}"
+        ) from None
+    return factory()
+
+
+def quick_sweep(sweep: SweepSpec) -> SweepSpec:
+    """Reduced-scale variant of a sweep (same matrix, smaller trace)."""
+    return SweepSpec(
+        name=sweep.name + "@quick", base=sweep.base.quick(), grids=sweep.grids
+    )
+
+
+#: The paper's FB-dataset base cell: 100 SWIM-synthesized jobs on the
+#: 100-machine Amazon cluster (Sect. 4.1), HFSP with paper defaults.
+def paper_fb_base(seed: int = 0) -> ScenarioSpec:
+    return ScenarioSpec(
+        name="paper-fb",
+        workload=WorkloadAxis(kind="fb", seed=seed, num_jobs=100),
+        cluster=ClusterAxis(num_machines=100),
+        scheduler=SchedulerAxis(policy="hfsp"),
+    )
+
+
+@register_preset("paper-fb")
+def _paper_fb() -> SweepSpec:
+    """Sect. 4.2 / Fig. 3: FIFO vs FAIR vs HFSP sojourn on the FB trace."""
+    return SweepSpec(
+        name="paper-fb",
+        base=paper_fb_base(),
+        grids=(
+            SweepSpec.grid(**{"scheduler.policy": ("fifo", "fair", "hfsp")}),
+        ),
+    )
+
+
+@register_preset("paper-cluster-size")
+def _paper_cluster_size() -> SweepSpec:
+    """Fig. 5: mean sojourn vs cluster size (10..100 machines), FAIR vs
+    HFSP — scarcity grows HFSP's advantage."""
+    return SweepSpec(
+        name="paper-cluster-size",
+        # num_hosts pinned: the SAME workload (placement + RNG stream) at
+        # every swept cluster size — only scarcity varies.
+        base=paper_fb_base().override(**{"workload.num_hosts": 100}),
+        grids=(
+            SweepSpec.grid(**{
+                "cluster.num_machines": (10, 20, 30, 50, 70, 100),
+                "scheduler.policy": ("fair", "hfsp"),
+            }),
+        ),
+    )
+
+
+@register_preset("paper-estimation-error")
+def _paper_estimation_error() -> SweepSpec:
+    """Fig. 6: HFSP robustness to size-estimation error on the MAP-only FB
+    variant (Sect. 4.3), alpha x error-seed grid + an error-independent
+    FAIR reference cell (non-rectangular: two grids)."""
+    base = paper_fb_base().override(**{"workload.map_only": True})
+    return SweepSpec(
+        name="paper-estimation-error",
+        base=base,
+        grids=(
+            SweepSpec.grid(**{
+                "scheduler.error_alpha": (0.0, 0.1, 0.25, 0.5, 0.75, 1.0),
+                "scheduler.error_seed": (0, 1, 2, 3, 4),
+            }),
+            SweepSpec.grid(**{"scheduler.policy": ("fair",)}),
+        ),
+    )
+
+
+@register_preset("paper-preemption")
+def _paper_preemption() -> SweepSpec:
+    """Sect. 4.4 axis on the FB trace: HFSP under EAGER / WAIT / KILL."""
+    return SweepSpec(
+        name="paper-preemption",
+        base=paper_fb_base(),
+        grids=(
+            SweepSpec.grid(**{
+                "scheduler.preemption": ("eager", "wait", "kill"),
+            }),
+        ),
+    )
+
+
+@register_preset("seed-robustness")
+def _seed_robustness() -> SweepSpec:
+    """Beyond-paper: the Fig. 3 comparison across workload seeds 0-5 —
+    is the HFSP win an artifact of one synthesized trace?"""
+    return SweepSpec(
+        name="seed-robustness",
+        base=paper_fb_base(),
+        grids=(
+            SweepSpec.grid(**{
+                "scheduler.policy": ("fifo", "fair", "hfsp"),
+                "workload.seed": (0, 1, 2, 3, 4, 5),
+            }),
+        ),
+    )
+
+
+@register_preset("ml-workload")
+def _ml_workload() -> SweepSpec:
+    """Beyond-paper: the TPU-adaptation ML workload under all policies."""
+    return SweepSpec(
+        name="ml-workload",
+        base=ScenarioSpec(
+            name="ml-workload",
+            workload=WorkloadAxis(kind="ml", num_jobs=40),
+            cluster=ClusterAxis(
+                num_machines=8, map_slots=2, reduce_slots=1,
+                dma_bandwidth=60e9,
+            ),
+        ),
+        grids=(
+            SweepSpec.grid(**{"scheduler.policy": ("fifo", "fair", "hfsp")}),
+        ),
+    )

@@ -1,0 +1,127 @@
+"""Materialize and run one scenario cell.
+
+``run_scenario(spec)`` is the single choke point between the declarative
+layer and the simulator: it synthesizes (or replays) the workload, builds
+the cluster and scheduler from the spec's axes, runs the discrete-event
+simulation, and returns a machine-readable report dict (see
+:mod:`repro.scenarios.report`).  Every benchmark, sweep cell, and CLI
+invocation goes through here, so a scenario's meaning cannot drift
+between consumers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import (
+    ClusterSpec,
+    FairScheduler,
+    FIFOScheduler,
+    HFSPConfig,
+    HFSPScheduler,
+    Preemption,
+    SimResult,
+    Simulator,
+)
+from repro.core.types import JobSpec
+from repro.scenarios.report import scenario_report
+from repro.scenarios.spec import ScenarioSpec
+from repro.workload import (
+    WorkloadSpec,
+    fb_dataset,
+    fb_scaled_dataset,
+    job_class,
+    ml_dataset,
+)
+
+
+def build_workload(spec: ScenarioSpec) -> tuple[list[JobSpec], dict[int, str]]:
+    """Jobs + class_of for the spec's workload axis."""
+    w = spec.workload
+    num_hosts = w.num_hosts or spec.cluster.num_machines
+    if w.kind == "fb":
+        wspec = WorkloadSpec(
+            num_machines=num_hosts, task_jitter=w.task_jitter
+        )
+        jobs, class_of = fb_dataset(
+            seed=w.seed, num_jobs=w.num_jobs, spec=wspec
+        )
+    elif w.kind == "fb_scaled":
+        wspec = WorkloadSpec(task_jitter=w.task_jitter)
+        jobs, class_of = fb_scaled_dataset(
+            seed=w.seed,
+            num_jobs=w.num_jobs,
+            num_machines=num_hosts,
+            spec=wspec,
+        )
+    elif w.kind == "ml":
+        jobs, class_of = ml_dataset(seed=w.seed, num_jobs=w.num_jobs)
+    elif w.kind == "trace":
+        from repro.scenarios.trace import load_trace
+
+        jobs, class_of, _ = load_trace(w.trace_path)
+        if not class_of:
+            class_of = {
+                j.job_id: job_class(len(j.map_tasks)) for j in jobs
+            }
+    else:  # pragma: no cover - WorkloadAxis validates
+        raise ValueError(f"unknown workload kind {w.kind!r}")
+    if w.map_only:
+        jobs = [dataclasses.replace(j, reduce_tasks=()) for j in jobs]
+    return jobs, class_of
+
+
+def build_cluster(spec: ScenarioSpec) -> ClusterSpec:
+    c = spec.cluster
+    return ClusterSpec(
+        num_machines=c.num_machines,
+        map_slots_per_machine=c.map_slots,
+        reduce_slots_per_machine=c.reduce_slots,
+        dma_bandwidth=c.dma_bandwidth,
+    )
+
+
+def build_scheduler(spec: ScenarioSpec, cluster: ClusterSpec):
+    s = spec.scheduler
+    if s.policy == "fifo":
+        return FIFOScheduler(cluster)
+    if s.policy == "fair":
+        return FairScheduler(cluster)
+    return HFSPScheduler(
+        cluster,
+        HFSPConfig(
+            preemption=Preemption(s.preemption),
+            sample_set_size=s.sample_set_size,
+            delta=s.delta,
+            error_alpha=s.error_alpha,
+            error_seed=s.error_seed,
+            vc_backend=s.vc_backend,
+        ),
+    )
+
+
+def _materialize_and_run(
+    spec: ScenarioSpec,
+) -> tuple[SimResult, dict[int, str], object, list[JobSpec]]:
+    """The one cell-materialization sequence (every consumer goes
+    through here so a scenario's meaning cannot fork)."""
+    cluster = build_cluster(spec)
+    jobs, class_of = build_workload(spec)
+    sch = build_scheduler(spec, cluster)
+    res = Simulator(cluster, sch, jobs, heartbeat=spec.heartbeat).run()
+    return res, class_of, sch, jobs
+
+
+def simulate(spec: ScenarioSpec) -> tuple[SimResult, dict[int, str], object]:
+    """Run the cell; returns (SimResult, class_of, scheduler)."""
+    res, class_of, sch, _ = _materialize_and_run(spec)
+    return res, class_of, sch
+
+
+def run_scenario(spec: ScenarioSpec) -> dict:
+    """Run one cell and reduce it to the machine-readable report dict."""
+    t0 = time.time()
+    res, class_of, sch, jobs = _materialize_and_run(spec)
+    wall = time.time() - t0
+    return scenario_report(spec, res, jobs, class_of, sch, wall)

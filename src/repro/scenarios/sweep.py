@@ -1,0 +1,152 @@
+"""Parallel sweep engine with a resumable on-disk result store.
+
+``run_sweep`` expands a :class:`~repro.scenarios.spec.SweepSpec` into its
+scenario cells and fans them out across worker *processes* (the simulator
+is pure Python — process pools are the only way to use multiple cores).
+Results stream into a :class:`ResultStore` (append-only JSONL) as cells
+finish, keyed by ``(cell_id, spec_hash)``:
+
+* **resume** — a re-run of an interrupted sweep skips every cell whose
+  (cell_id, spec_hash) pair is already stored, recomputing nothing;
+* **staleness** — editing a preset changes the affected cells'
+  ``spec_hash``, so stale stored results are ignored (and recomputed)
+  instead of being silently reused;
+* **determinism** — a cell's result is a pure function of its spec (all
+  RNG seeds are spec fields), so parallel/serial execution and any
+  resume order produce identical stores up to line order.
+
+Workers use the ``spawn`` start method: the parent may hold jax state
+(the vcluster jax backend), which does not survive ``fork``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+from pathlib import Path
+
+from repro.scenarios.runner import run_scenario
+from repro.scenarios.spec import ScenarioSpec, SweepSpec
+
+
+class ResultStore:
+    """Append-only JSONL store of finished sweep cells.
+
+    One line per finished cell::
+
+        {"cell_id": ..., "spec_hash": ..., "result": {scenario_report}}
+
+    Append-only + line-granular means a crash mid-write loses at most the
+    last line (a torn trailing line is detected and ignored on load).
+    """
+
+    def __init__(self, path: str | Path):
+        self.path = Path(path)
+
+    def load(self) -> dict[tuple[str, str], dict]:
+        """{(cell_id, spec_hash): result} for every intact stored line."""
+        out: dict[tuple[str, str], dict] = {}
+        if not self.path.exists():
+            return out
+        with self.path.open() as f:
+            for ln in f:
+                ln = ln.strip()
+                if not ln:
+                    continue
+                try:
+                    rec = json.loads(ln)
+                except json.JSONDecodeError:
+                    continue  # torn trailing line from an interrupted run
+                out[(rec["cell_id"], rec["spec_hash"])] = rec["result"]
+        return out
+
+    def append(self, cell_id: str, spec_hash: str, result: dict) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        rec = {"cell_id": cell_id, "spec_hash": spec_hash, "result": result}
+        with self.path.open("a") as f:
+            f.write(json.dumps(rec, sort_keys=True) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+
+def _run_cell(payload: tuple[str, dict]) -> tuple[str, dict]:
+    """Worker entry point (must be importable for spawn)."""
+    cid, spec_dict = payload
+    return cid, run_scenario(ScenarioSpec.from_dict(spec_dict))
+
+
+def run_sweep(
+    sweep: SweepSpec,
+    store: ResultStore | str | Path | None = None,
+    workers: int = 0,
+    max_cells: int | None = None,
+    progress=None,
+) -> dict[str, dict]:
+    """Run (or resume) a sweep; returns {cell_id: scenario_report}.
+
+    ``workers=0`` runs inline (deterministic single-process order,
+    used by tests and small presets); ``workers=N`` fans cells out over N
+    spawn-based processes.  ``max_cells`` bounds how many *new* cells are
+    computed this call — the hook tests use it to interrupt a sweep
+    mid-grid and assert resume semantics.  ``progress`` is an optional
+    ``f(cell_id, result)`` callback invoked as each cell finishes.
+    """
+    if store is not None and not isinstance(store, ResultStore):
+        store = ResultStore(store)
+    cells = sweep.expand()
+    done = store.load() if store is not None else {}
+
+    results: dict[str, dict] = {}
+    todo: list[tuple[str, ScenarioSpec]] = []
+    for cid, spec in cells:
+        prior = done.get((cid, spec.spec_hash()))
+        if prior is not None:
+            results[cid] = prior
+        else:
+            todo.append((cid, spec))
+    if max_cells is not None:
+        todo = todo[:max_cells]
+
+    def finish(cid: str, spec: ScenarioSpec, result: dict) -> None:
+        results[cid] = result
+        if store is not None:
+            store.append(cid, spec.spec_hash(), result)
+        if progress is not None:
+            progress(cid, result)
+
+    if workers <= 1:
+        for cid, spec in todo:
+            finish(cid, spec, run_scenario(spec))
+        return results
+
+    spec_of = dict(todo)
+    import multiprocessing
+
+    ctx = multiprocessing.get_context("spawn")
+    failures: dict[str, BaseException] = {}
+    with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
+        cid_of_future = {
+            pool.submit(_run_cell, (cid, spec.to_dict())): cid
+            for cid, spec in todo
+        }
+        pending = set(cid_of_future)
+        while pending:
+            finished, pending = wait(pending, return_when=FIRST_COMPLETED)
+            for fut in finished:
+                # A failing cell must not discard its siblings' finished
+                # work: store everything that succeeded, raise at the end
+                # (resume then recomputes only the failed cells).
+                try:
+                    cid, result = fut.result()
+                except Exception as e:  # noqa: BLE001 - reported below
+                    failures[cid_of_future[fut]] = e
+                    continue
+                finish(cid, spec_of[cid], result)
+    if failures:
+        detail = "; ".join(f"{cid}: {e!r}" for cid, e in sorted(failures.items()))
+        raise RuntimeError(
+            f"{len(failures)} sweep cell(s) failed ({detail}); "
+            f"{len(results)} finished cells were stored"
+        )
+    return results

@@ -38,13 +38,16 @@ def run_trace(
     *,
     paranoid: bool = False,
     vc_backend: str | None = None,
+    vc_auto_threshold: int | None = None,
     num_jobs: int = 30,
     num_machines: int = 20,
 ) -> dict:
     """One FB-trace simulation; returns the comparable outcome summary.
 
     ``vc_backend`` selects the virtual-cluster kernel backend for the HFSP
-    variants (fifo/fair have no virtual cluster and ignore it).
+    variants (fifo/fair have no virtual cluster and ignore it);
+    ``vc_auto_threshold`` sets the "auto" backend's numpy->jax latch point
+    (None keeps the production default).
     """
     cluster = fb_cluster(num_machines=num_machines)
     jobs, _ = fb_dataset(seed=seed, num_jobs=num_jobs)
@@ -54,6 +57,8 @@ def run_trace(
         sch = FairScheduler(cluster, SchedulerConfig(paranoid_indexes=paranoid))
     else:
         cfg = HFSPConfig(paranoid_indexes=paranoid, vc_backend=vc_backend)
+        if vc_auto_threshold is not None:
+            cfg.vc_auto_threshold = vc_auto_threshold
         if name == "hfsp-kill":
             cfg.preemption = Preemption.KILL
         sch = HFSPScheduler(cluster, cfg)

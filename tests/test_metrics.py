@@ -1,0 +1,132 @@
+"""Direct unit tests for repro/core/metrics.py.
+
+The metrics were previously exercised only through the benchmarks; these
+pin their contracts (exact ECDF shape, percentile conventions, per-class
+grouping, delta sign) so the scenario report layer can rely on them.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import (
+    SojournSummary,
+    ecdf,
+    ecdf_quantiles,
+    per_class_sojourns,
+    per_job_delta,
+    slowdowns,
+    summarize,
+)
+from repro.core.simulator import SimResult
+
+
+def _result(arrival: dict, completion: dict) -> SimResult:
+    res = SimResult()
+    res.arrival.update(arrival)
+    res.completion.update(completion)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# ecdf
+# ---------------------------------------------------------------------------
+def test_ecdf_sorted_values_and_uniform_steps():
+    xs, ps = ecdf([3.0, 1.0, 2.0, 2.0])
+    assert np.array_equal(xs, [1.0, 2.0, 2.0, 3.0])
+    assert np.allclose(ps, [0.25, 0.5, 0.75, 1.0])
+
+
+def test_ecdf_single_value():
+    xs, ps = ecdf([7.0])
+    assert np.array_equal(xs, [7.0])
+    assert np.array_equal(ps, [1.0])
+
+
+def test_ecdf_quantiles_keys_and_monotonicity():
+    q = ecdf_quantiles(list(range(101)))
+    assert set(q) == {"p5", "p25", "p50", "p75", "p90", "p95", "p99"}
+    assert q["p50"] == 50.0
+    vals = [q[k] for k in ("p5", "p25", "p50", "p75", "p90", "p95", "p99")]
+    assert vals == sorted(vals)
+
+
+def test_ecdf_quantiles_empty():
+    assert ecdf_quantiles([]) == {
+        k: 0.0 for k in ("p5", "p25", "p50", "p75", "p90", "p95", "p99")
+    }
+
+
+# ---------------------------------------------------------------------------
+# SojournSummary.of
+# ---------------------------------------------------------------------------
+def test_sojourn_summary_of_basic():
+    s = SojournSummary.of([1.0, 2.0, 3.0, 4.0])
+    assert s.mean == 2.5
+    assert s.median == 2.5
+    assert s.count == 4
+    assert s.p95 == pytest.approx(np.percentile([1, 2, 3, 4], 95))
+
+
+def test_sojourn_summary_of_empty_is_zeros():
+    s = SojournSummary.of([])
+    assert (s.mean, s.median, s.p95, s.count) == (0.0, 0.0, 0.0, 0)
+
+
+# ---------------------------------------------------------------------------
+# per_class_sojourns / summarize
+# ---------------------------------------------------------------------------
+def test_per_class_sojourns_groups_and_unknown_class():
+    res = _result(
+        arrival={0: 0.0, 1: 10.0, 2: 20.0, 3: 0.0},
+        completion={0: 5.0, 1: 40.0, 2: 25.0, 3: 9.0},
+    )
+    per = per_class_sojourns(res, {0: "small", 1: "large", 2: "small"})
+    assert per["small"] == [5.0, 5.0]
+    assert per["large"] == [30.0]
+    assert per["?"] == [9.0]  # job 3 has no class label
+
+
+def test_per_class_sojourns_ignores_jobs_without_arrival():
+    res = _result(arrival={0: 0.0}, completion={0: 5.0, 1: 50.0})
+    per = per_class_sojourns(res, {0: "small", 1: "small"})
+    assert per == {"small": [5.0]}
+
+
+def test_summarize_includes_all_bucket():
+    res = _result(
+        arrival={0: 0.0, 1: 0.0}, completion={0: 10.0, 1: 30.0}
+    )
+    summ = summarize(res, {0: "small", 1: "large"})
+    assert set(summ) == {"small", "large", "all"}
+    assert summ["all"].mean == 20.0
+    assert summ["small"].count == 1
+
+
+# ---------------------------------------------------------------------------
+# per_job_delta
+# ---------------------------------------------------------------------------
+def test_per_job_delta_sign_and_intersection():
+    a = _result(arrival={0: 0.0, 1: 0.0, 2: 0.0}, completion={0: 20.0, 1: 15.0})
+    b = _result(arrival={0: 0.0, 1: 0.0, 2: 0.0}, completion={0: 10.0, 1: 18.0, 2: 5.0})
+    delta = per_job_delta(a, b)
+    # Only jobs completed in BOTH runs appear; positive = b is better.
+    assert set(delta) == {0, 1}
+    assert delta[0] == 10.0
+    assert delta[1] == -3.0
+
+
+# ---------------------------------------------------------------------------
+# slowdowns
+# ---------------------------------------------------------------------------
+def test_slowdowns_divides_by_serialized_size():
+    res = _result(arrival={0: 0.0, 1: 0.0}, completion={0: 30.0, 1: 8.0})
+    slow = slowdowns(res, {0: 10.0, 1: 16.0})
+    assert slow[0] == 3.0
+    assert slow[1] == 0.5  # parallel speedup -> slowdown below 1
+
+
+def test_slowdowns_skips_nonpositive_sizes():
+    res = _result(arrival={0: 0.0, 1: 0.0}, completion={0: 3.0, 1: 4.0})
+    assert slowdowns(res, {0: 0.0}) == {}

@@ -1,0 +1,255 @@
+"""Scenario engine tests: spec algebra, presets, trace replay fidelity,
+sweep resume semantics, and the paper-fb acceptance property.
+
+Everything runs at quick scale (30 jobs / 20 machines) so the suite stays
+in seconds; the properties pinned here are scale-independent.
+"""
+
+import json
+
+import pytest
+
+from repro.scenarios import (
+    ResultStore,
+    ScenarioSpec,
+    SweepSpec,
+    WorkloadAxis,
+    export_trace,
+    get_preset,
+    list_presets,
+    load_trace,
+    matrix_report,
+    paper_fb_base,
+    quick_sweep,
+    run_scenario,
+    run_sweep,
+)
+from repro.scenarios.runner import build_workload
+from repro.scenarios.spec import cell_id
+
+
+# ---------------------------------------------------------------------------
+# Spec algebra
+# ---------------------------------------------------------------------------
+def test_spec_roundtrips_through_json():
+    spec = paper_fb_base().override(**{
+        "scheduler.policy": "fair", "workload.seed": 7, "heartbeat": 5.0,
+    })
+    blob = json.dumps(spec.to_dict(), sort_keys=True)
+    back = ScenarioSpec.from_dict(json.loads(blob))
+    assert back == spec
+    assert back.spec_hash() == spec.spec_hash()
+
+
+def test_override_validates_unknown_fields():
+    with pytest.raises(KeyError):
+        paper_fb_base().override(**{"scheduler.polcy": "fair"})
+    with pytest.raises(KeyError):
+        paper_fb_base().override(**{"heartbeet": 1.0})
+    with pytest.raises(KeyError):
+        # First segment names a plain (non-axis) field.
+        paper_fb_base().override(**{"name.typo": "x"})
+
+
+def test_override_applies_codependent_axis_fields_together():
+    # kind="trace" is only valid with trace_path: both land in one replace.
+    spec = paper_fb_base().override(**{
+        "workload.kind": "trace", "workload.trace_path": "/tmp/x.jsonl",
+    })
+    assert spec.workload.kind == "trace"
+
+
+def test_spec_hash_changes_with_any_axis():
+    base = paper_fb_base()
+    assert base.spec_hash() != base.override(**{"workload.seed": 1}).spec_hash()
+    assert base.spec_hash() != base.override(**{"scheduler.error_alpha": 0.5}).spec_hash()
+
+
+def test_workload_axis_validation():
+    with pytest.raises(ValueError):
+        WorkloadAxis(kind="nope")
+    with pytest.raises(ValueError):
+        WorkloadAxis(kind="trace")  # no trace_path
+
+
+# ---------------------------------------------------------------------------
+# Sweeps + presets
+# ---------------------------------------------------------------------------
+def test_sweep_expansion_union_and_dedup():
+    sweep = SweepSpec(
+        name="t",
+        base=paper_fb_base(),
+        grids=(
+            SweepSpec.grid(**{"scheduler.policy": ("fifo", "fair")}),
+            SweepSpec.grid(**{"scheduler.policy": ("fair", "hfsp")}),
+        ),
+    )
+    cells = sweep.expand()
+    ids = [cid for cid, _ in cells]
+    assert ids == [
+        "scheduler.policy=fifo", "scheduler.policy=fair", "scheduler.policy=hfsp",
+    ]
+
+
+def test_cell_id_is_deterministic_and_sorted():
+    a = cell_id((("b", 2), ("a", 1)))
+    b = cell_id((("a", 1), ("b", 2)))
+    assert a == b == "a=1,b=2"
+    assert cell_id(()) == "base"
+
+
+def test_registered_presets_expand():
+    assert "paper-fb" in list_presets()
+    for name in list_presets():
+        cells = get_preset(name).expand()
+        assert cells, name
+        assert len({cid for cid, _ in cells}) == len(cells), name
+
+
+def test_paper_fb_matrix_covers_all_policies():
+    policies = {
+        spec.scheduler.policy for _, spec in get_preset("paper-fb").expand()
+    }
+    assert policies == {"fifo", "fair", "hfsp"}
+
+
+# ---------------------------------------------------------------------------
+# Trace export -> import -> replay (bit-identical)
+# ---------------------------------------------------------------------------
+def test_trace_roundtrip_bit_identical_replay(tmp_path):
+    base = paper_fb_base().quick()
+    jobs, class_of = build_workload(base)
+    path = tmp_path / "golden.jsonl"
+    export_trace(path, jobs, class_of, {"generator": "fb", "seed": 0})
+
+    jobs2, class_of2, meta = load_trace(path)
+    assert meta["generator"] == "fb"
+    assert class_of2 == class_of
+    by_id = {j.job_id: j for j in jobs}
+    for j2 in jobs2:
+        j = by_id[j2.job_id]
+        assert j2.arrival_time == j.arrival_time  # bit-exact float
+        for a, b in zip(
+            j2.map_tasks + j2.reduce_tasks, j.map_tasks + j.reduce_tasks
+        ):
+            assert a.duration == b.duration
+            assert a.input_hosts == b.input_hosts
+            assert a.state_bytes == b.state_bytes
+
+    direct = run_scenario(base)
+    replay = run_scenario(base.override(**{
+        "workload.kind": "trace", "workload.trace_path": str(path),
+    }))
+    assert (
+        replay["completion_fingerprint"] == direct["completion_fingerprint"]
+    )
+
+
+def test_trace_rejects_wrong_kind_and_version(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"kind": "not-a-trace", "version": 1}\n')
+    with pytest.raises(ValueError, match="not a repro-trace"):
+        load_trace(p)
+    p.write_text('{"kind": "repro-trace", "version": 99}\n')
+    with pytest.raises(ValueError, match="version"):
+        load_trace(p)
+
+
+# ---------------------------------------------------------------------------
+# Sweep engine: resume + staleness + the acceptance property
+# ---------------------------------------------------------------------------
+def test_sweep_interrupted_resumes_without_recompute(tmp_path):
+    sweep = quick_sweep(get_preset("paper-fb"))
+    store = ResultStore(tmp_path / "store.jsonl")
+
+    # "Interrupt" mid-grid after 2 of 3 cells.
+    first = run_sweep(sweep, store=store, max_cells=2)
+    assert len(first) == 2
+    stored_lines = store.path.read_text().splitlines()
+    assert len(stored_lines) == 2
+
+    # Resume: only the missing cell is computed (store grows by one line,
+    # the two finished cells' stored results are returned verbatim).
+    resumed = run_sweep(sweep, store=store)
+    assert len(resumed) == 3
+    lines_after = store.path.read_text().splitlines()
+    assert len(lines_after) == 3
+    assert lines_after[:2] == stored_lines
+    for cid, res in first.items():
+        assert resumed[cid]["completion_fingerprint"] == res["completion_fingerprint"]
+
+    # Idempotent: a third run computes nothing.
+    again = run_sweep(sweep, store=store)
+    assert len(store.path.read_text().splitlines()) == 3
+    assert again.keys() == resumed.keys()
+
+
+def test_sweep_store_invalidates_on_spec_change(tmp_path):
+    base = paper_fb_base().quick()
+    sweep = SweepSpec(
+        name="t", base=base,
+        grids=(SweepSpec.grid(**{"scheduler.policy": ("hfsp",)}),),
+    )
+    store = ResultStore(tmp_path / "store.jsonl")
+    run_sweep(sweep, store=store)
+    assert len(store.path.read_text().splitlines()) == 1
+
+    # Same cell_id, different base spec -> spec_hash mismatch -> recompute.
+    edited = SweepSpec(
+        name="t", base=base.override(**{"workload.seed": 1}),
+        grids=sweep.grids,
+    )
+    run_sweep(edited, store=store)
+    assert len(store.path.read_text().splitlines()) == 2
+
+
+def test_sweep_store_tolerates_torn_trailing_line(tmp_path):
+    sweep = quick_sweep(get_preset("paper-fb"))
+    store = ResultStore(tmp_path / "store.jsonl")
+    run_sweep(sweep, store=store, max_cells=1)
+    with store.path.open("a") as f:
+        f.write('{"cell_id": "torn')  # crash mid-write
+    assert len(store.load()) == 1
+    resumed = run_sweep(sweep, store=store)
+    assert len(resumed) == 3
+
+
+def test_parallel_sweep_failure_keeps_finished_cells(tmp_path):
+    """One failing cell must not discard its siblings' finished work:
+    the successes are stored, the failure is raised at the end, and a
+    resume recomputes only the failed cell."""
+    base = paper_fb_base().quick()
+    sweep = SweepSpec(
+        name="t", base=base,
+        grids=(
+            SweepSpec.grid(**{"scheduler.policy": ("fifo", "fair")}),
+            SweepSpec.grid(**{
+                "workload.kind": ("trace",),
+                "workload.trace_path": (str(tmp_path / "missing.jsonl"),),
+            }),
+        ),
+    )
+    store = ResultStore(tmp_path / "store.jsonl")
+    with pytest.raises(RuntimeError, match="1 sweep cell"):
+        run_sweep(sweep, store=store, workers=2)
+    assert len(store.load()) == 2  # both good cells stored
+
+
+def test_paper_fb_quick_hfsp_strictly_lowest():
+    """The acceptance property: FIFO, Fair, and HFSP on the same
+    synthesized FB trace, HFSP mean sojourn strictly lowest (the paper's
+    qualitative Sect. 4.2 result)."""
+    results = run_sweep(quick_sweep(get_preset("paper-fb")))
+    means = {cid: r["mean_sojourn_s"] for cid, r in results.items()}
+    hfsp = means["scheduler.policy=hfsp"]
+    assert hfsp < means["scheduler.policy=fair"]
+    assert hfsp < means["scheduler.policy=fifo"]
+    matrix = matrix_report(results)
+    assert matrix["best"] == "scheduler.policy=hfsp"
+
+
+def test_map_only_axis_strips_reduce_tasks():
+    spec = paper_fb_base().quick().override(**{"workload.map_only": True})
+    jobs, _ = build_workload(spec)
+    assert all(not j.reduce_tasks for j in jobs)
+    assert any(j.map_tasks for j in jobs)

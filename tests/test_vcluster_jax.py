@@ -144,12 +144,30 @@ def test_jit_cache_amortized_within_bucket():
 # VirtualCluster integration: backend selection + batched what-ifs
 # ---------------------------------------------------------------------------
 def test_resolve_backend_env(monkeypatch):
-    assert resolve_backend(None) == "numpy"
+    monkeypatch.delenv("REPRO_VC_BACKEND", raising=False)
+    assert resolve_backend(None) == "auto"
     monkeypatch.setenv("REPRO_VC_BACKEND", "jax")
     assert resolve_backend(None) == "jax"
     assert resolve_backend("numpy") == "numpy"  # explicit arg wins
+    monkeypatch.setenv("REPRO_VC_BACKEND", "numpy")
+    assert resolve_backend(None) == "numpy"
     with pytest.raises(ValueError):
         resolve_backend("tpu-emoji")
+
+
+def test_auto_backend_latches_at_threshold():
+    """backend="auto" starts on the numpy kernels and latches to jax when
+    the live-job count reaches the threshold; removals never latch back
+    (recompile thrash protection)."""
+    vc = VirtualCluster(Phase.MAP, slots=10, backend="auto", auto_threshold=4)
+    for j in range(3):
+        vc.add_job(j, 50.0, 2)
+    assert vc.backend == "numpy"
+    vc.add_job(3, 50.0, 2)
+    assert vc.backend == "jax"
+    vc.remove_job(0)
+    vc.remove_job(1)
+    assert vc.backend == "jax"  # latched
 
 
 def _make_vc(backend, slots=10, jobs=6):
