@@ -27,10 +27,25 @@ structural event" — numpy reference vs the jitted JAX backend
 * **waterfill_speedup**: numpy/jax projection-loop ratio, the headline
   column recorded into BENCH_sched.json by ``benchmarks/run.py --quick``.
 
+Two further CSV blocks characterize the PR-4 demand-indexed core and the
+epsilon-window event coalescing:
+
+* ``sparse_demand`` — steady-state decision latency at a cell with many
+  live jobs but few actionable ones (every slot busy on long tasks, a
+  tail of queued jobs that provably cannot act): the demand-indexed pass
+  vs the legacy full walk over every live job
+  (``SchedulerConfig.demand_indexed=False``) — bit-identical schedules,
+  the ``sparse_speedup`` column is the headline the 5000x1000 cell
+  records into BENCH_sched.json (``decision_latency_ms``);
+* ``eps_sweep`` — passes/events/wall at several ``event_epsilon`` values
+  on the bursty scaled-FB trace (near-timestamp arrival batches coalesce
+  into one pass per window; eps=0 is the bit-identical legacy loop).
+
 Usage:
   PYTHONPATH=src python -m benchmarks.bench_sched_overhead \
       [--schedulers hfsp,fair,fifo] [--jobs 50,500,5000] \
-      [--machines 20,200,1000] [--events 20000] [--seed 0]
+      [--machines 20,200,1000] [--events 20000] [--seed 0] \
+      [--no-sparse] [--no-eps]
 """
 
 from __future__ import annotations
@@ -41,13 +56,17 @@ import time
 import numpy as np
 
 from benchmarks.common import SCHEDULERS, CsvOut
-from repro.core import Simulator
+from repro.core import HFSPConfig, HFSPScheduler, Simulator
 from repro.core.simulator import EventLimitReached
-from repro.core.types import ClusterSpec
+from repro.core.types import ClusterSpec, JobSpec, Phase, TaskSpec
 from repro.workload import fb_scaled_dataset
 
 JOB_GRID = (50, 500, 5000)
 MACHINE_GRID = (20, 200, 1000)
+
+#: Epsilon values (seconds) for the coalescing sweep; 0 is the legacy
+#: pass-per-event baseline.
+EPS_GRID = (0.0, 0.5, 2.0, 10.0)
 
 
 def waterfill_cell(
@@ -140,6 +159,210 @@ def run_waterfill_micro(job_grid=JOB_GRID, *, seed: int = 0) -> list[dict]:
     return cells
 
 
+def sparse_demand_workload(
+    n_jobs: int, *, sample_t: float = 10.0, body_t: float = 1e6
+) -> list[JobSpec]:
+    """Many live jobs, few actionable: each job has one short sample task
+    (so HFSP's training finalizes quickly) and one very long body task.
+    All jobs arrive in a single t=0 batch (one coalesced pass), bodies
+    saturate every slot, and the queued tail stays live — but only the
+    boundary jobs can ever act, which is exactly the demand-sparsity the
+    indexed core exploits."""
+    jobs = []
+    for j in range(n_jobs):
+        maps = (
+            TaskSpec(j, Phase.MAP, 0, sample_t),
+            TaskSpec(j, Phase.MAP, 1, body_t),
+        )
+        jobs.append(
+            JobSpec(job_id=j, arrival_time=0.0, map_tasks=maps, reduce_tasks=())
+        )
+    return jobs
+
+
+def run_sparse_cell(
+    n_jobs: int,
+    n_machines: int,
+    *,
+    demand_indexed: bool = True,
+    warmup_t: float = 120.0,
+    measure_events: int = 300,
+) -> dict:
+    """Steady-state decision latency at one sparse-demand cell.
+
+    Runs the warmup (arrival batch + training waves) untimed, then
+    measures ``measure_events`` heartbeat-driven passes with every slot
+    busy and the queue tail pending — the state where the legacy pass
+    still walks O(live jobs) while the demand-indexed pass touches only
+    actionable ones.  vc_backend is pinned to numpy so the cell is
+    hermetic (steady-state passes run no projections either way;
+    sample_set_size=1 keeps the training warmup to two waves)."""
+    cluster = ClusterSpec(
+        num_machines=n_machines,
+        map_slots_per_machine=4,
+        reduce_slots_per_machine=2,
+    )
+    cfg = HFSPConfig(
+        sample_set_size=1, vc_backend="numpy", demand_indexed=demand_indexed
+    )
+    sch = _TimedScheduler(HFSPScheduler(cluster, cfg))
+    sim = Simulator(cluster, sch, sparse_demand_workload(n_jobs))
+    sim.run(until=warmup_t)
+    # Six consecutive steady-state windows on the same simulation; the
+    # reported latency is the MINIMUM of the per-window medians.  The
+    # gate compares this across PRs and container timing noise is
+    # run-level (whole windows run slow under host contention), far
+    # beyond the gate threshold at sub-millisecond scale — the lower
+    # envelope of window medians is the noise-robust estimator (same
+    # reasoning as best-of-reps in waterfill_cell); windows are cheap
+    # next to the warmup, so more of them tighten the envelope.
+    medians, all_times = [], []
+    horizon = warmup_t
+    t0 = time.perf_counter()
+    for _ in range(6):
+        sch.pass_times = []
+        horizon += 10 * measure_events
+        try:
+            sim.run(until=horizon, max_events=measure_events)
+        except EventLimitReached:
+            pass
+        times = sorted(sch.pass_times)
+        if times:
+            medians.append(times[len(times) // 2])
+            all_times.extend(times)
+    wall = time.perf_counter() - t0
+    inner = sch._inner
+    all_times.sort()
+    n = len(all_times)
+    return {
+        "jobs": n_jobs,
+        "machines": n_machines,
+        "demand_indexed": demand_indexed,
+        "live": inner.n_live_phase(Phase.MAP),
+        "actionable": len(inner._jobs_pending[Phase.MAP.value])
+        + len(inner._jobs_suspended[Phase.MAP.value]),
+        "passes": n,
+        "wall_s": wall,
+        "decision_latency_ms": 1e3 * min(medians) if medians else 0.0,
+        "mean_pass_ms": 1e3 * sum(all_times) / n if n else 0.0,
+        "p99_pass_ms": (
+            1e3 * all_times[min(n - 1, int(0.99 * n))] if n else 0.0
+        ),
+    }
+
+
+def run_sparse_demand(
+    cells: tuple[tuple[int, int], ...] = ((500, 100), (5000, 1000)),
+) -> list[dict]:
+    """The sparse-demand block: demand-indexed vs legacy walk per cell."""
+    out = CsvOut(
+        "sparse_demand",
+        ["jobs", "machines", "live", "actionable", "passes",
+         "indexed_ms", "legacy_ms", "sparse_speedup"],
+    )
+    rows = []
+    for nj, nm in cells:
+        new = run_sparse_cell(nj, nm, demand_indexed=True)
+        old = run_sparse_cell(nj, nm, demand_indexed=False)
+        speed = (
+            old["decision_latency_ms"] / new["decision_latency_ms"]
+            if new["decision_latency_ms"] > 0
+            else float("inf")
+        )
+        row = {**new, "legacy_ms": old["decision_latency_ms"],
+               "sparse_speedup": speed}
+        rows.append(row)
+        out.add(
+            nj, nm, row["live"], row["actionable"], row["passes"],
+            round(row["decision_latency_ms"], 4),
+            round(row["legacy_ms"], 4), round(speed, 1),
+        )
+        print(
+            f"# sparse jobs={nj} machines={nm}: live={row['live']} "
+            f"actionable={row['actionable']}; "
+            f"indexed {row['decision_latency_ms']:.3f}ms vs legacy "
+            f"{row['legacy_ms']:.3f}ms per pass ({speed:.1f}x)",
+            flush=True,
+        )
+    out.emit()
+    return rows
+
+
+def run_eps_sweep(
+    *,
+    n_jobs: int = 600,
+    n_machines: int = 200,
+    max_events: int = 6_000,
+    max_seconds: float = 45.0,
+    seed: int = 0,
+    eps_grid: tuple[float, ...] = EPS_GRID,
+) -> list[dict]:
+    """Pass counts vs ``event_epsilon`` on the bursty scaled-FB trace.
+
+    Every row is driven toward the same ``max_events`` budget; eps>0
+    rows run one pass per near-timestamp window instead of one per
+    event.  ``max_seconds`` is a safety cap only — a row that hits it
+    processes fewer events, so downstream consumers must compare
+    ``passes_per_event`` (events-normalized), not raw pass counts,
+    across rows (benchmarks/run.py and check.sh do)."""
+    jobs, _ = fb_scaled_dataset(
+        seed=seed, num_jobs=n_jobs, num_machines=n_machines
+    )
+    cluster = ClusterSpec(
+        num_machines=n_machines,
+        map_slots_per_machine=4,
+        reduce_slots_per_machine=2,
+    )
+    out = CsvOut(
+        "eps_sweep",
+        ["eps", "events", "passes", "passes_per_event", "wall_s",
+         "mean_pass_ms", "sim_t"],
+    )
+    rows = []
+    for eps in eps_grid:
+        sch = _TimedScheduler(
+            HFSPScheduler(cluster, HFSPConfig(vc_backend="numpy"))
+        )
+        sim = Simulator(cluster, sch, jobs, event_epsilon=eps)
+        t0 = time.perf_counter()
+        while (
+            sim.events_processed < max_events
+            and time.perf_counter() - t0 < max_seconds
+        ):
+            try:
+                sim.run(
+                    max_events=min(250, max_events - sim.events_processed)
+                )
+                break
+            except EventLimitReached:
+                continue
+        wall = time.perf_counter() - t0
+        n = len(sch.pass_times)
+        row = {
+            "eps": eps,
+            "events": sim.events_processed,
+            "passes": sim.passes,
+            "passes_per_event": sim.passes / max(sim.events_processed, 1),
+            "wall_s": wall,
+            "mean_pass_ms": 1e3 * sum(sch.pass_times) / n if n else 0.0,
+            "sim_t": sim._now,
+        }
+        rows.append(row)
+        out.add(
+            eps, row["events"], row["passes"],
+            round(row["passes_per_event"], 4), round(wall, 3),
+            round(row["mean_pass_ms"], 4), round(row["sim_t"], 1),
+        )
+        print(
+            f"# eps={eps}: {row['passes']} passes / {row['events']} events "
+            f"({row['passes_per_event']:.2f} passes/event), "
+            f"{wall:.2f}s wall",
+            flush=True,
+        )
+    out.emit()
+    return rows
+
+
 class _TimedScheduler:
     """Wraps a scheduler, timing every schedule() pass."""
 
@@ -225,6 +448,10 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-waterfill", action="store_true",
                     help="skip the water-fill kernel microbenchmark")
+    ap.add_argument("--no-sparse", action="store_true",
+                    help="skip the sparse-demand decision-latency block")
+    ap.add_argument("--no-eps", action="store_true",
+                    help="skip the epsilon-window coalescing sweep")
     args = ap.parse_args(argv)
 
     out = CsvOut(
@@ -262,6 +489,10 @@ def main(argv: list[str] | None = None) -> None:
         run_waterfill_micro(
             tuple(int(x) for x in args.jobs.split(",")), seed=args.seed
         )
+    if not args.no_sparse:
+        run_sparse_demand()
+    if not args.no_eps:
+        run_eps_sweep(seed=args.seed)
 
 
 if __name__ == "__main__":

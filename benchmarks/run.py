@@ -98,6 +98,42 @@ def quick_sched_wall(json_path: str | None = None, seed: int = 0) -> dict:
            else "jax unavailable"),
         flush=True,
     )
+    # Demand-indexed decision latency at the trace-scale sparse-demand
+    # cell (5000 jobs x 1000 machines): the PR-4 tentpole gate cell —
+    # bench_gate.py fails check.sh on a >25% regression of
+    # decision_latency_ms, same policy as the hfsp wall gate.
+    sparse = bench_sched_overhead.run_sparse_demand(cells=((5000, 1000),))[0]
+    record["sched_sparse_5000x1000"] = {
+        k: (round(v, 4) if isinstance(v, float) else v)
+        for k, v in sparse.items()
+    }
+    # Epsilon-window coalescing sweep: pass-count delta at equal event
+    # progress (check.sh prints the delta from this block).
+    eps_rows = bench_sched_overhead.run_eps_sweep(seed=seed)
+    record["eps_sweep"] = {
+        str(r["eps"]): {
+            "passes": r["passes"],
+            "events": r["events"],
+            "passes_per_event": round(r["passes_per_event"], 4),
+        }
+        for r in eps_rows
+    }
+    # Compare events-normalized pass rates: a row that hit the sweep's
+    # wall-clock safety cap processed fewer events, so raw pass counts
+    # across rows would not be comparable.
+    base = eps_rows[0]
+    for r in eps_rows[1:]:
+        ratio = r["passes_per_event"] / max(base["passes_per_event"], 1e-12)
+        extra = (
+            "" if r["events"] == base["events"]
+            else f" [events {r['events']} vs {base['events']}]"
+        )
+        print(
+            f"# eps sweep: eps={r['eps']} cuts passes/event "
+            f"{base['passes_per_event']:.4f} -> {r['passes_per_event']:.4f} "
+            f"({ratio:.1%} of eps=0){extra}",
+            flush=True,
+        )
     record["scenarios"] = scenario_smoke()
     if json_path:
         with open(json_path, "w") as f:

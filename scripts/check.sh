@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
 # One-command gate: tier-1 tests + the quick scheduler benchmark (which
-# includes the paper-fb@quick scenario smoke sweep: all three schedulers
-# on one reduced-scale FB trace) + the perf-trajectory gate (appends
-# BENCH_sched.json to BENCH_history.jsonl and fails on a >25% hfsp
-# wall-clock regression OR a >10% per-scenario mean-sojourn regression —
-# policy-level quality, not just speed — vs the previous entry).
+# includes the paper-fb@quick scenario smoke sweep, the sparse-demand
+# 5000x1000 decision-latency cell, and the epsilon-window coalescing
+# sweep) + the perf-trajectory gate (appends BENCH_sched.json to
+# BENCH_history.jsonl and fails on a >25% hfsp wall-clock regression OR a
+# >25% sparse-demand decision-latency regression (0.3ms noise floor) OR a >10% per-scenario
+# mean-sojourn regression — policy-level quality, not just speed — vs the
+# previous entry).
 #
 #   scripts/check.sh            # tests + quick bench + trajectory gate
 #   scripts/check.sh --no-bench # tests only
@@ -23,4 +25,24 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== perf trajectory gate =="
   python scripts/bench_gate.py --json BENCH_sched.json \
     --history BENCH_history.jsonl --threshold 0.25
+  echo
+  echo "== epsilon-window pass-count delta =="
+  python - <<'PY'
+import json
+rec = json.load(open("BENCH_sched.json"))
+sweep = rec.get("eps_sweep", {})
+# Ratios use passes_per_event: rows that hit the sweep's wall-clock
+# safety cap processed fewer events, so raw pass counts don't compare.
+base = sweep.get("0.0", {}).get("passes_per_event")
+for eps in sorted(sweep, key=float):
+    row = sweep[eps]
+    delta = (
+        f" ({row['passes_per_event'] / base:.1%} of eps=0 passes/event)"
+        if base and float(eps) > 0 else ""
+    )
+    print(
+        f"eps={eps}: {row['passes']} passes / {row['events']} events"
+        f"{delta}"
+    )
+PY
 fi

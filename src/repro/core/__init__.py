@@ -11,7 +11,7 @@ from repro.core.fair import FairScheduler
 from repro.core.fifo import FIFOScheduler
 from repro.core.hfsp import HFSPConfig, HFSPScheduler
 from repro.core.scheduler import Scheduler, SchedulerConfig
-from repro.core.simulator import SimResult, Simulator
+from repro.core.simulator import SimConfig, SimResult, Simulator
 from repro.core.types import (
     ClusterSpec,
     JobSpec,
@@ -36,6 +36,7 @@ __all__ = [
     "Preemption",
     "Scheduler",
     "SchedulerConfig",
+    "SimConfig",
     "SimResult",
     "Simulator",
     "TaskSpec",

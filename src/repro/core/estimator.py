@@ -192,6 +192,21 @@ class TrainingModule:
     # the scheduler iterate only in-training jobs instead of probing every
     # live job each pass.  Entries leave when training finalizes.
     _active: dict[tuple[int, Phase], None] = field(default_factory=dict)
+    # -- demand indexes (kept in lockstep with task-state events) -----------
+    # Jobs with >=1 dispatchable sample task (PENDING and unobserved) —
+    # exactly the jobs the training scheduler can act on this pass.
+    _wanted: dict[Phase, dict[int, None]] = field(
+        default_factory=lambda: {Phase.MAP: {}, Phase.REDUCE: {}}
+    )
+    # Per-job RUNNING sample keys (in sample-set order) for active jobs,
+    # plus an O(1) total — feeds the training budget and the protected-key
+    # quota without re-probing every active job's sample set each pass.
+    _running: dict[Phase, dict[int, dict[tuple, None]]] = field(
+        default_factory=lambda: {Phase.MAP: {}, Phase.REDUCE: {}}
+    )
+    _n_running: dict[Phase, int] = field(
+        default_factory=lambda: {Phase.MAP: 0, Phase.REDUCE: 0}
+    )
 
     # -- lifecycle -----------------------------------------------------------
     def start_phase(self, job: JobState, phase: Phase) -> float:
@@ -209,6 +224,7 @@ class TrainingModule:
         job.in_training[phase] = not st.done
         if not st.done:
             self._active[(job.spec.job_id, phase)] = None
+            self.sync_job(job, phase)
         if not tasks:
             return 0.0
         if math.isinf(self.xi):
@@ -221,6 +237,91 @@ class TrainingModule:
     def active_jobs(self, phase: Phase) -> list[int]:
         """Job ids still training this phase, in training-start order."""
         return [j for (j, p) in self._active if p is phase]
+
+    # -- demand-index queries (O(1) / O(result)) -----------------------------
+    def wanted_jobs(self, phase: Phase) -> list[int]:
+        """Training jobs with >=1 dispatchable sample task this phase —
+        the only jobs the training scheduler can act on."""
+        return list(self._wanted[phase])
+
+    def n_running_samples(self, phase: Phase) -> int:
+        """Total RUNNING sample tasks across active jobs (O(1))."""
+        return self._n_running[phase]
+
+    def running_sample_keys(self, job_id: int, phase: Phase) -> list[tuple]:
+        """RUNNING sample keys of one active job, in sample-set order."""
+        return list(self._running[phase].get(job_id, ()))
+
+    def running_sample_jobs(self, phase: Phase) -> dict[int, dict[tuple, None]]:
+        """{job_id: running-sample-key dict} for active jobs with >=1
+        RUNNING sample (read-only view; the protected-key quota walks
+        this instead of probing every active job)."""
+        return self._running[phase]
+
+    def check_indexes(self, phase: Phase, jobs: dict[int, "JobState"]) -> None:
+        """Paranoid cross-check: rebuild the wanted/running-sample
+        reference by probing every active job's sample states and assert
+        the incremental indexes match (called from HFSP's paranoid pass
+        alongside the scheduler-level demand-index check)."""
+        ref_wanted: set[int] = set()
+        ref_running: dict[int, list[tuple]] = {}
+        for (jid, p), st in self._training.items():
+            if p is not phase or st.done or (jid, p) not in self._active:
+                continue
+            job = jobs.get(jid)
+            if job is None:
+                continue
+            for key in st.sample_keys:
+                att = job.tasks[key]
+                if att.state is TaskState.RUNNING:
+                    ref_running.setdefault(jid, []).append(key)
+                elif att.state is TaskState.PENDING and key not in st.observed:
+                    ref_wanted.add(jid)
+        assert set(self._wanted[phase]) == ref_wanted, (
+            f"training wanted mismatch ({phase}): "
+            f"{set(self._wanted[phase])} != {ref_wanted}"
+        )
+        got_running = {j: list(ks) for j, ks in self._running[phase].items()}
+        assert got_running == ref_running, (
+            f"training running-sample mismatch ({phase})"
+        )
+        assert self._n_running[phase] == sum(
+            len(v) for v in ref_running.values()
+        ), f"training running-sample count mismatch ({phase})"
+
+    def sync_job(self, job: JobState, phase: Phase) -> None:
+        """Recompute this job's demand-index entries from its (<= sample
+        set size) sample-task states.  Called after every executor event
+        that can change a sample task's state or observation status —
+        O(sample set) per event, which keeps every per-pass training query
+        O(actionable) instead of O(active jobs)."""
+        jid = job.spec.job_id
+        st = self._training.get((jid, phase))
+        run_idx = self._running[phase]
+        old = run_idx.get(jid)
+        if st is None or st.done:
+            self._wanted[phase].pop(jid, None)
+            if old is not None:
+                self._n_running[phase] -= len(old)
+                del run_idx[jid]
+            return
+        wanted = False
+        running: dict[tuple, None] = {}
+        for key in st.sample_keys:
+            att = job.tasks[key]
+            if att.state is TaskState.RUNNING:
+                running[key] = None
+            elif att.state is TaskState.PENDING and key not in st.observed:
+                wanted = True
+        if wanted:
+            self._wanted[phase][jid] = None
+        else:
+            self._wanted[phase].pop(jid, None)
+        self._n_running[phase] += len(running) - (len(old) if old else 0)
+        if running:
+            run_idx[jid] = running
+        elif old is not None:
+            del run_idx[jid]
 
     def sample_keys(self, job_id: int, phase: Phase) -> list[tuple]:
         st = self._training.get((job_id, phase))
@@ -273,7 +374,9 @@ class TrainingModule:
             return None
         if key in st.sample_keys:
             st.observed[key] = duration
-        return self._maybe_finalize(job, phase, st)
+        out = self._maybe_finalize(job, phase, st)
+        self.sync_job(job, phase)
+        return out
 
     def observe_progress(self, job: JobState, phase: Phase, key: tuple,
                          progress_fraction: float, elapsed: float) -> float | None:
@@ -290,7 +393,9 @@ class TrainingModule:
             return None
         p = max(progress_fraction, 1e-9)
         st.observed[key] = elapsed / p
-        return self._maybe_finalize(job, phase, st)
+        out = self._maybe_finalize(job, phase, st)
+        self.sync_job(job, phase)
+        return out
 
     def _maybe_finalize(self, job: JobState, phase: Phase,
                         st: _PhaseTraining) -> float | None:

@@ -14,6 +14,13 @@ count is furthest below its max-min fair share.  No preemption.
 Per pass, each job is granted up to its (max-min) fair target in deficit
 order — equivalent to the slot-at-a-time deficit rule but one sort per
 pass instead of one per slot.
+
+Iteration goes through the base scheduler's demand indexes
+(:meth:`~repro.core.scheduler.Scheduler.demand_union`): the fair targets
+are computed over every phase-live job (running counts shape the
+deficits), but the assignment sort covers only jobs with pending demand —
+the only ones that can receive a slot — so the per-pass sort is
+O(pending jobs x log) instead of O(live jobs x log).
 """
 
 from __future__ import annotations
@@ -35,23 +42,36 @@ class FairScheduler(Scheduler):
             free = view.free_slots(phase)
             if not free:
                 continue
-            jobs = self.live_jobs(phase)
-            if not jobs:
+            if self.config.demand_indexed:
+                by_id = self.demand_union(phase)
+            else:
+                # Index-free reference: scan the live table directly.
+                by_id = self.live_jobs_scan(phase)
+            if not by_id:
                 continue
             demands = {
-                js.spec.job_id: (self._demand(js, phase), js.spec.weight)
-                for js in jobs
+                jid: (self._demand(js, phase), js.spec.weight)
+                for jid, js in by_id.items()
             }
             # Equal-share max-min targets over *total* slots.
             targets = discrete_allocation(
                 demands,
                 self.cluster.slots(phase),
-                {js.spec.job_id: 0 for js in jobs},  # no small-first bias
+                {jid: 0 for jid in by_id},  # no small-first bias
             )
             # Deficit order: furthest below fair target first, FIFO ties.
-            by_id = {js.spec.job_id: js for js in jobs}
+            # Only jobs with pending tasks can take a slot; the demand
+            # index narrows the sort to exactly those (a job without
+            # pending demand is a no-op in _assign_pending regardless of
+            # its deficit).
+            if self.config.demand_indexed:
+                # The pending index is a subset of demand_union by the
+                # paranoid-checked invariant — no membership re-filter.
+                cand = list(self._jobs_pending[phase.value])
+            else:
+                cand = list(by_id)
             order = sorted(
-                by_id,
+                cand,
                 key=lambda j: (
                     -(targets[j] - by_id[j].n_running(phase)),
                     by_id[j].spec.arrival_time,

@@ -77,6 +77,7 @@ from repro.core.scheduler import (
     Action,
     ClusterView,
     Kill,
+    LazySet,
     Resume,
     Scheduler,
     SchedulerConfig,
@@ -149,6 +150,8 @@ class HFSPScheduler(Scheduler):
         }
         self._clock = 0.0
         self._eager_enabled = True  # hysteresis state (Sect. 3.3)
+        # Pass-scoped victim-order cache (reset per phase pass).
+        self._pass_victims: list[int] | None = None
         if cfg.error_alpha > 0:
             import numpy as _np
 
@@ -246,6 +249,38 @@ class HFSPScheduler(Scheduler):
         for vc in self.vc.values():
             vc.remove_job(job_id)
         self._skip_counts.pop(job_id, None)
+
+    # -- run-state hooks: keep the Training module's demand indexes in
+    # lockstep with sample-task state changes (O(sample set) per event).
+    def _training_sync(self, att) -> None:
+        phase = att.spec.phase
+        jid = att.spec.job_id
+        if self.training.is_training(jid, phase):
+            js = self.jobs.get(jid)
+            if js is not None:
+                self.training.sync_job(js, phase)
+
+    def on_task_started(self, att, slot) -> None:
+        super().on_task_started(att, slot)
+        self._training_sync(att)
+
+    def on_task_resumed(self, att, slot) -> None:
+        super().on_task_resumed(att, slot)
+        self._training_sync(att)
+
+    def on_task_suspended(self, att) -> None:
+        super().on_task_suspended(att)
+        self._training_sync(att)
+
+    def on_task_killed(self, att) -> None:
+        super().on_task_killed(att)
+        self._training_sync(att)
+
+    def _paranoid_check(self, view: ClusterView, phase: Phase) -> None:
+        super()._paranoid_check(view, phase)
+        # The Training module's demand indexes share the hook-update
+        # contract, so the paranoid pass cross-checks them too.
+        self.training.check_indexes(phase, self.jobs)
 
     def on_tick(self, now: float) -> None:
         self._advance(now)
@@ -369,9 +404,19 @@ class HFSPScheduler(Scheduler):
         self, view: ClusterView, phase: Phase, now: float
     ) -> list[Action]:
         actions: list[Action] = []
-        live = {js.spec.job_id: js for js in self.live_jobs(phase)}
-        if not live:
-            return actions
+        pv = phase.value
+        demand_indexed = self.config.demand_indexed
+        live_scan: dict[int, JobState] | None = None
+        if demand_indexed:
+            if not self._n_live_phase[pv]:
+                return actions
+        else:
+            # Index-free reference mode: phase-liveness comes from a
+            # fresh live-table scan, so demand-index corruption diverges
+            # the two modes instead of reproducing bit for bit.
+            live_scan = self.live_jobs_scan(phase)
+            if not live_scan:
+                return actions
         # Run-state engine upkeep: O(1) count check (resyncs only under a
         # hook-less executor); full rebuild + assert in paranoid mode.
         self._maybe_resync_indexes(view, phase)
@@ -381,13 +426,26 @@ class HFSPScheduler(Scheduler):
         # Jobs ranked by projected PS finish time (Sect. 3.1).  Jobs whose
         # phase is live but unknown to the virtual cluster (zero tasks)
         # cannot appear here; jobs with infinite estimates sort last.
-        order = [j for j in self.vc[phase].schedule_order(now) if j in live]
-        pos_of = {j: i for i, j in enumerate(order)}
+        # Positions come from the order cache — valid across passes until
+        # the next structural event — so a steady-state pass pays O(1)
+        # here, not O(live jobs).
+        order = self.vc[phase].schedule_order(now)
+        pos_of = self.vc[phase].schedule_pos(now)
+        # Pass-scoped victim-order cache (running jobs by ascending
+        # position), built lazily on the first preemption walk.
+        self._pass_victims = None
 
         eager_ok = (
             self.config.preemption is Preemption.EAGER and self._eager_enabled
         )
-        protected = self._protected_keys(live, phase)
+        n_live = (
+            self._n_live_phase[pv] if demand_indexed else len(live_scan)
+        )
+        # Lazy: only preemption walks consult the protected set, and the
+        # pool check materializes it at most once per phase pass.
+        protected = LazySet(
+            lambda: self._protected_keys(phase, n_live, live_scan)
+        )
         # Pass-scoped memo of per-machine victim lists (position-sorted).
         # The run indexes are static during a pass, so each machine's list
         # is computed at most once per pass — previously the single most
@@ -405,18 +463,61 @@ class HFSPScheduler(Scheduler):
         # (Sect. 3.1.1) — under full load that requires preempting up to
         # the training job's fair share.
         acts, free = self._schedule_training(
-            live, order, phase, free, now, eager_ok, protected,
+            phase, free, now, pos_of, eager_ok, protected, n_live, live_scan,
         )
         actions.extend(acts)
 
-        # -- 2. Job scheduler: focus resources in projected-finish order ---
-        for pos, jid in enumerate(order):
-            js = live[jid]
+        # -- 2. Job scheduler: focus resources in projected-finish order.
+        # Only jobs with actionable demand — pending or suspended tasks —
+        # can emit an action here, so those demand-index members are the
+        # candidate set.  Jobs with running tasks only matter as
+        # preemption victims and are reached through the victim order.
+        pend = self._jobs_pending[pv]
+        susp = self._jobs_suspended[pv]
+        if demand_indexed and not pend and not susp:
+            return actions
+        rmax = -2  # lazy: highest schedule position of any running job
+        if demand_indexed:
+            # Actor eligibility: known to the virtual cluster and, when
+            # no slot is free, positioned before some running job — a job
+            # can then act only by preempting (or displacing into) a
+            # *later-ordered* running victim, so actors past every
+            # running job are provable no-ops (their victim walks break
+            # immediately and count nothing, in every preemption mode).
+            lim = None
+            if not free:
+                rmax = self._max_running_pos(phase, order)
+                if rmax < 0:
+                    return actions
+                lim = rmax
+            cand = [
+                j for j in pend
+                if j in pos_of and (lim is None or pos_of[j] < lim)
+            ]
+            cand.extend(
+                j for j in susp
+                if j not in pend
+                and j in pos_of
+                and (lim is None or pos_of[j] < lim)
+            )
+            actors = sorted(cand, key=pos_of.__getitem__)
+        else:
+            # Legacy walk: every phase-live job in schedule order.
+            actors = [j for j in order if j in live_scan]
+        jobs = self.jobs
+        for jid in actors:
+            pos = pos_of[jid]
+            if demand_indexed and not free:
+                if rmax == -2:
+                    rmax = self._max_running_pos(phase, order)
+                if pos >= rmax:
+                    break  # ascending order: every later actor is a no-op too
+            js = jobs[jid]
             # Resume suspended tasks in place (Sect. 3.3 locality), possibly
             # suspending tasks of *later-ordered* jobs on the same machine.
             if js.n_suspended(phase):
                 acts, free = self._resume_with_preemption(
-                    js, pos, phase, free, pos_of, order,
+                    js, pos, phase, free, pos_of,
                     victim_memo, victim_dead, eager_ok, protected,
                 )
                 actions.extend(acts)
@@ -430,7 +531,7 @@ class HFSPScheduler(Scheduler):
             unmet = self._unclaimed_pending(js, phase)
             if unmet > 0 and not free and not delayed:
                 acts, freed = self._preempt_for(
-                    js, pos, phase, unmet, order, eager_ok, protected,
+                    js, pos, phase, unmet, pos_of, eager_ok, protected,
                 )
                 actions.extend(acts)
                 if freed:
@@ -448,23 +549,80 @@ class HFSPScheduler(Scheduler):
                     free.extend(left)
         return actions
 
+    def _max_running_pos(self, phase: Phase, order: list[int]) -> int:
+        """Highest schedule position among jobs with RUNNING tasks (-1 if
+        none run).  Walks the cached order from the back, so the cost is
+        O(trailing non-running jobs) — small in the focused steady state
+        where HFSP serves the earliest-finishing jobs."""
+        running = self._jobs_running[phase.value]
+        if not running:
+            return -1
+        for i in range(len(order) - 1, -1, -1):
+            if order[i] in running:
+                return i
+        return -1
+
+    def _victim_order(self, phase: Phase, pos_of: dict[int, int]) -> list[int]:
+        """Jobs with RUNNING tasks by ascending schedule position, cached
+        for the pass (the run indexes are static during a pass)."""
+        if self._pass_victims is None:
+            self._pass_victims = sorted(
+                (
+                    j for j in self._jobs_running[phase.value]
+                    if j in pos_of
+                ),
+                key=pos_of.__getitem__,
+            )
+        return self._pass_victims
+
+    def _pool_ok(self, phase: Phase, protected) -> bool:
+        """True while >=1 RUNNING task could still be preempted this pass:
+        running tasks minus protected sample tasks minus victims already
+        claimed.  O(1) after the protected set materializes; turns the
+        saturated-training pathology (every hungry job fruitlessly walking
+        every running-but-protected task) into a single check."""
+        pv = phase.value
+        return (
+            self._n_running_idx[pv]
+            - len(protected)
+            - self._claimed_running.get(pv, 0)
+        ) > 0
+
     # -- training module (Sect. 3.2) -----------------------------------
     def _schedule_training(
         self,
-        live: dict[int, JobState],
-        order: list[int],
         phase: Phase,
         free: list[SlotKey],
         now: float,
+        pos_of: dict[int, int],
         eager_ok: bool,
-        protected: set,
+        protected,
+        n_live: int,
+        live_scan: dict[int, JobState] | None,
     ) -> tuple[list[Action], list[SlotKey]]:
         actions: list[Action] = []
-        # Only in-training jobs matter: iterate the Training module's
-        # active index (O(training jobs)) instead of probing every live job.
-        training_jobs = [
-            live[j] for j in self.training.active_jobs(phase) if j in live
-        ]
+        legacy = live_scan is not None
+        # Only jobs with a dispatchable sample task matter: iterate the
+        # Training module's wanted index (O(actionable training jobs)),
+        # not every in-training job — a job whose samples are all running
+        # or observed cannot receive a training slot this pass.  The
+        # index-free reference mode probes every active job instead (the
+        # pre-index walk; `wanted_sample_tasks` below is the per-job
+        # filter either way).
+        if legacy:
+            training_jobs = [
+                live_scan[j]
+                for j in self.training.active_jobs(phase)
+                if j in live_scan
+            ]
+        else:
+            training_jobs = [
+                js
+                for js in (
+                    self._live.get(j) for j in self.training.wanted_jobs(phase)
+                )
+                if js is not None
+            ]
         if not training_jobs:
             return actions, free
         # "Execution slots are assigned according to a 'fewer remaining
@@ -476,8 +634,8 @@ class HFSPScheduler(Scheduler):
                 js.n_unfinished(phase), js.spec.arrival_time, js.spec.job_id,
             )
         )
-        budget = self._training_budget(live, phase)
-        fair = max(1, self.cluster.slots(phase) // max(len(live), 1))
+        budget = self._training_budget(phase, live_scan)
+        fair = max(1, self.cluster.slots(phase) // max(n_live, 1))
         mode = self.config.preemption
         can_preempt = not (
             mode is Preemption.WAIT
@@ -501,18 +659,21 @@ class HFSPScheduler(Scheduler):
             actions.extend(acts)
             # In-flight sample tasks count toward the fair share already
             # granted; only preempt for the genuinely unmet remainder.
-            running_samples = sum(
-                1
-                for k in self.training.sample_keys(js.spec.job_id, phase)
-                if js.tasks[k].state is TaskState.RUNNING
-            )
+            if legacy:
+                running_samples = sum(
+                    1
+                    for k in self.training.sample_keys(js.spec.job_id, phase)
+                    if js.tasks[k].state is TaskState.RUNNING
+                )
+            else:
+                running_samples = len(
+                    self.training.running_sample_keys(js.spec.job_id, phase)
+                )
             unmet = min(quota, max(0, fair - running_samples))
             if unmet > 0 and not free and can_preempt:
                 # Victims: last-ordered (largest) jobs first, never self.
                 acts, freed = self._preempt_for(
-                    js, -1, phase, unmet,
-                    [j for j in order if j != js.spec.job_id],
-                    eager_ok, protected,
+                    js, -1, phase, unmet, pos_of, eager_ok, protected,
                 )
                 actions.extend(acts)
                 if freed:
@@ -531,24 +692,37 @@ class HFSPScheduler(Scheduler):
                     free.extend(left)
         return actions, free
 
-    def _training_budget(self, live: dict[int, JobState], phase: Phase) -> int:
+    def _training_budget(
+        self, phase: Phase, live_scan: dict[int, JobState] | None = None
+    ) -> int:
         cap = self.config.max_training_slots
         if cap is None:
             cap = self.cluster.slots(phase)
-        # Slots currently held by still-training sample tasks count against
-        # the budget (sample sets are <= 5 keys: check task state directly).
-        in_flight = 0
-        for jid in self.training.active_jobs(phase):
-            js = live.get(jid)
-            if js is None:
-                continue
-            for k in self.training.sample_keys(jid, phase):
-                if js.tasks[k].state is TaskState.RUNNING:
-                    in_flight += 1
+        # Slots currently held by still-training sample tasks count
+        # against the budget — an O(1) read of the Training module's
+        # running-sample counter (kept by the sync hooks).  The
+        # index-free reference mode probes every active job's sample
+        # states instead (the pre-index walk).
+        if live_scan is None:
+            in_flight = self.training.n_running_samples(phase)
+        else:
+            in_flight = 0
+            for jid in self.training.active_jobs(phase):
+                js = live_scan.get(jid)
+                if js is None:
+                    continue
+                for k in self.training.sample_keys(jid, phase):
+                    if js.tasks[k].state is TaskState.RUNNING:
+                        in_flight += 1
         return max(0, cap - in_flight)
 
     # -- preemption (Sect. 3.3) ------------------------------------------
-    def _protected_keys(self, live: dict, phase: Phase) -> set:
+    def _protected_keys(
+        self,
+        phase: Phase,
+        n_live: int,
+        live_scan: dict[int, JobState] | None = None,
+    ) -> set:
         """Running sample tasks shielded from preemption.  The Training
         module holds "at least a fair share" (Sect. 3.1.1) — a QUOTA of
         slots/num_jobs per training job, NOT blanket immunity (protecting
@@ -557,19 +731,33 @@ class HFSPScheduler(Scheduler):
         # Integer fair share, floored at 1: a running sample task is ALWAYS
         # shielded — two in-training jobs may otherwise kill each other's
         # samples every pass (progress resets under KILL => livelock).
-        quota = max(1, self.cluster.slots(phase) // max(len(live), 1))
+        quota = max(1, self.cluster.slots(phase) // max(n_live, 1))
         out: set = set()
-        for jid in self.training.active_jobs(phase):
-            js = live.get(jid)
-            if js is None:
-                continue
+        if live_scan is not None:
+            # Index-free reference mode: probe every active job's sample
+            # states (the pre-index walk).
+            for jid in self.training.active_jobs(phase):
+                js = live_scan.get(jid)
+                if js is None:
+                    continue
+                shielded = 0
+                for key in self.training.sample_keys(jid, phase):
+                    if shielded >= quota:
+                        break
+                    if js.tasks[key].state is TaskState.RUNNING:
+                        out.add(key)
+                        shielded += 1
+            return out
+        # Only jobs with >=1 RUNNING sample can contribute — read the
+        # Training module's running-sample index (sample-set order per
+        # job) instead of probing every active job's sample states.
+        for keys in self.training.running_sample_jobs(phase).values():
             shielded = 0
-            for key in self.training.sample_keys(jid, phase):
+            for key in keys:
                 if shielded >= quota:
                     break
-                if js.tasks[key].state is TaskState.RUNNING:
-                    out.add(key)
-                    shielded += 1
+                out.add(key)
+                shielded += 1
         return out
 
     def _preempt_for(
@@ -578,25 +766,36 @@ class HFSPScheduler(Scheduler):
         pos: int,
         phase: Phase,
         unmet: int,
-        order: list[int],
+        pos_of: dict[int, int],
         eager_ok: bool,
-        protected: set,
+        protected,
     ) -> tuple[list[Action], list[SlotKey]]:
-        """Free up to ``unmet`` slots held by later-ordered jobs, walking the
-        order from the back (largest projected finish / size first).
-        Victims come straight from the incremental ``_run_by_job`` index —
-        O(victims inspected), no pass-wide rebuild."""
+        """Free up to ``unmet`` slots held by later-ordered jobs, walking
+        the victim order (running jobs by schedule position) from the back
+        (largest projected finish / size first).  Victims come straight
+        from the incremental ``_run_by_job`` index — O(victims inspected),
+        no pass-wide rebuild — and the walk stops at the first victim not
+        ordered after ``pos``.  The preemptable-pool check skips the walk
+        entirely once nothing unprotected is left running."""
         actions: list[Action] = []
         freed: list[SlotKey] = []
+        if not self._pool_ok(phase, protected):
+            return actions, freed
         mode = self.config.preemption
         wait_mode = mode is Preemption.WAIT or (
             mode is Preemption.EAGER and not eager_ok
         )
         pv = phase.value
-        for i in range(len(order) - 1, pos, -1):  # back-to-front, no slice
+        vorder = self._victim_order(phase, pos_of)
+        self_id = js.spec.job_id
+        for i in range(len(vorder) - 1, -1, -1):  # back-to-front
             if unmet <= 0:
                 break
-            vjid = order[i]
+            vjid = vorder[i]
+            if pos_of[vjid] <= pos:
+                break  # ascending victim order: no later-ordered jobs left
+            if vjid == self_id:
+                continue
             bucket = self._run_by_job.get((vjid, pv))
             victims: list[TaskAttempt] | tuple = (
                 list(bucket.values()) if bucket else ()
@@ -643,11 +842,10 @@ class HFSPScheduler(Scheduler):
         phase: Phase,
         free: list[SlotKey],
         pos_of: dict[int, int],
-        order: list[int],
         victim_memo: dict[int, list[tuple[int, TaskAttempt]]],
         victim_dead: set[int],
         eager_ok: bool,
-        protected: set,
+        protected,
     ) -> tuple[list[Action], list[SlotKey]]:
         """Resume suspended tasks *on the machine that holds their state*
         (Sect. 3.3 "Impact on data locality"): free slot if available, else
@@ -663,6 +861,10 @@ class HFSPScheduler(Scheduler):
             return actions, free
         if not free and not eager_ok:
             return actions, free  # no slots and no preemption: nothing can move
+        if not free and not self._pool_ok(phase, protected):
+            # No slots and nothing unprotected left running: both the
+            # free-slot and the victim path fail for every suspended task.
+            return actions, free
         pv = phase.value
         # Potential-victim machines: machines hosting a running task of a
         # later-ordered job (only those can yield a slot via preemption).

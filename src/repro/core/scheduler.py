@@ -47,6 +47,33 @@ Index invariants (checked every pass under
   rebuild-from-scratch schedules bit-identical;
 * indexes never change during a pass (the executor applies actions only
   after ``schedule()`` returns), so a pass sees a consistent snapshot.
+
+Demand-indexed scheduling core
+------------------------------
+On top of the run-state indexes, the base scheduler maintains per-phase
+*demand* indexes keyed by what a scheduling pass can actually act on:
+
+* ``_jobs_pending``   — jobs with at least one PENDING task (can take a
+  free slot, or preempt on unmet demand);
+* ``_jobs_suspended`` — jobs with at least one SUSPENDED task (can
+  resume in place);
+* ``_jobs_running``   — jobs with at least one RUNNING task (preemption
+  victims; also part of the run-state engine above);
+* ``_n_live_phase``   — O(1) count of phase-live jobs (the denominator
+  of fair-share quotas).
+
+All four are updated in O(1) through the same executor hooks plus the
+arrival/completion events, so a pass iterates only jobs with actionable
+demand instead of every live job (see ``docs/scheduler_internals.md`` for
+the invariants and the update protocol).  REDUCE membership is gated on
+the slow-start unlock: a job's REDUCE demand is registered exactly once,
+by ``_register_reduce`` (at arrival when already unlocked, else at the
+MAP completion that crosses ``reduce_slowstart``).
+
+The demand indexes obey the same contract as the run-state indexes: the
+executor MUST call the hooks, membership never changes during a pass,
+and ``SchedulerConfig.paranoid_indexes`` rebuilds reference sets from
+the live-job table every pass and asserts equality.
 """
 
 from __future__ import annotations
@@ -124,6 +151,12 @@ class SchedulerConfig:
     # and assert they match the incrementally-maintained ones.  Slow; used
     # by the equivalence tests.
     paranoid_indexes: bool = False
+    # Perf/debug switch: when False, scheduling passes fall back to the
+    # legacy full walk over every phase-live job (no actionable-demand
+    # pre-filter, no position cutoff).  Schedules are bit-identical either
+    # way — the demand-index equivalence tests and the sched-overhead
+    # benchmark's sparse-demand cell compare the two paths.
+    demand_indexed: bool = True
 
 
 class Scheduler(abc.ABC):
@@ -149,6 +182,9 @@ class Scheduler(abc.ABC):
         # kept alongside _claimed so _unclaimed_pending is O(1) instead of
         # O(#claimed) per queried job.
         self._claimed_pending: dict[tuple[int, str], int] = {}
+        # Per-phase count of claims that targeted RUNNING tasks (preemption
+        # victims) — lets the preemptable-pool check stay O(1) per call.
+        self._claimed_running: dict[str, int] = {}
         # -- incremental run-state engine (see module docstring) ------------
         # Live views of RUNNING tasks, updated in O(1) by the executor
         # hooks below; read by preemption logic instead of rebuilding from
@@ -164,30 +200,90 @@ class Scheduler(abc.ABC):
         self._jobs_running: dict[str, set[int]] = {
             Phase.MAP.value: set(), Phase.REDUCE.value: set(),
         }
+        # -- demand indexes (see module docstring) --------------------------
+        # Jobs with >=1 PENDING / >=1 SUSPENDED task per phase, as
+        # insertion-ordered dict-sets (deterministic iteration).  REDUCE
+        # membership is gated on the slow-start unlock (_register_reduce).
+        self._jobs_pending: dict[str, dict[int, None]] = {
+            Phase.MAP.value: {}, Phase.REDUCE.value: {},
+        }
+        self._jobs_suspended: dict[str, dict[int, None]] = {
+            Phase.MAP.value: {}, Phase.REDUCE.value: {},
+        }
+        # O(1) per-phase live-job count (== len(live_jobs(phase))).
+        self._n_live_phase: dict[str, int] = {
+            Phase.MAP.value: 0, Phase.REDUCE.value: 0,
+        }
+        # Jobs whose REDUCE phase has been registered with the demand
+        # indexes (slow-start crossed) — registration happens exactly once.
+        self._reduce_open: set[int] = set()
 
     def _begin_pass(self) -> None:
         self._claimed.clear()
         self._claimed_pending.clear()
+        self._claimed_running.clear()
         self._pass_seq += 1
 
     def _claim(self, att: TaskAttempt) -> None:
         """Mark a task as acted on this pass.  All claims must go through
-        here so the per-(job, phase) pending-claim counters stay exact."""
+        here so the per-(job, phase) pending-claim and per-phase
+        running-claim counters stay exact."""
         key = att.spec.key
         self._claimed.add(key)
         if att.state is TaskState.PENDING:
             jk = (key[0], key[1])
             self._claimed_pending[jk] = self._claimed_pending.get(jk, 0) + 1
+        elif att.state is TaskState.RUNNING:
+            self._claimed_running[key[1]] = (
+                self._claimed_running.get(key[1], 0) + 1
+            )
 
     # -- events (executor -> scheduler) -------------------------------------
     def on_job_arrival(self, spec: JobSpec, now: float) -> JobState:
         js = JobState(spec=spec)
         self.jobs[spec.job_id] = js
         self._live[spec.job_id] = js
+        mv = Phase.MAP.value
+        if js.n_unfinished(Phase.MAP):
+            self._n_live_phase[mv] += 1
+            if js.n_pending(Phase.MAP):
+                self._jobs_pending[mv][spec.job_id] = None
+        if js.reduce_unlocked():
+            self._register_reduce(js)
         return js
+
+    def _register_reduce(self, js: JobState) -> None:
+        """Open the job's REDUCE phase for the demand indexes (called once,
+        when the slow-start fraction is crossed)."""
+        jid = js.spec.job_id
+        if jid in self._reduce_open:
+            return
+        self._reduce_open.add(jid)
+        rv = Phase.REDUCE.value
+        if js.n_unfinished(Phase.REDUCE):
+            self._n_live_phase[rv] += 1
+            if js.n_pending(Phase.REDUCE):
+                self._jobs_pending[rv][jid] = None
+        self._on_reduce_unlocked(js)
+
+    def _on_reduce_unlocked(self, js: JobState) -> None:
+        """Subclass hook: the job's REDUCE phase just became schedulable
+        (FIFO inserts into its arrival-ordered queue here)."""
 
     def on_task_complete(self, job_id: int, key: tuple, now: float) -> None:
         self._index_remove(key)
+        js = self.jobs.get(job_id)
+        if js is None:
+            return
+        pv = key[1]
+        phase = Phase(pv)
+        if js.n_unfinished(phase) == 0:
+            # Phase drained: drop the job from this phase's demand indexes.
+            self._n_live_phase[pv] -= 1
+            self._jobs_pending[pv].pop(job_id, None)
+            self._jobs_suspended[pv].pop(job_id, None)
+        if phase is Phase.MAP and js.reduce_unlocked():
+            self._register_reduce(js)
 
     def on_task_progress(
         self, job_id: int, key: tuple, fraction: float, elapsed: float, now: float
@@ -196,27 +292,44 @@ class Scheduler(abc.ABC):
 
     def on_job_complete(self, job_id: int, now: float) -> None:
         self._live.pop(job_id, None)
-        # Prune the (empty-by-now) per-job run buckets.
-        self._run_by_job.pop((job_id, Phase.MAP.value), None)
-        self._run_by_job.pop((job_id, Phase.REDUCE.value), None)
+        # Prune the (empty-by-now) per-job run buckets and demand entries.
+        for pv in (Phase.MAP.value, Phase.REDUCE.value):
+            self._run_by_job.pop((job_id, pv), None)
+            self._jobs_pending[pv].pop(job_id, None)
+            self._jobs_suspended[pv].pop(job_id, None)
+        self._reduce_open.discard(job_id)
 
     def on_tick(self, now: float) -> None:
         """Periodic heartbeat (executors call this every few sim-seconds)."""
 
     # -- run-state engine hooks (executor -> scheduler) ----------------------
     # Executors call these right after physically applying each action so
-    # the indexes mirror the cluster without per-pass rebuilds.
+    # the indexes mirror the cluster without per-pass rebuilds.  Each hook
+    # also folds the O(1) demand-index update for the state transition it
+    # reports (PENDING->RUNNING, SUSPENDED->RUNNING, RUNNING->SUSPENDED,
+    # RUNNING->PENDING).
     def on_task_started(self, att: TaskAttempt, slot: SlotKey) -> None:
         self._index_add(att, slot)
+        js = self.jobs.get(att.spec.job_id)
+        if js is not None and not js.n_pending(att.spec.phase):
+            self._jobs_pending[att.spec.phase.value].pop(att.spec.job_id, None)
 
     def on_task_resumed(self, att: TaskAttempt, slot: SlotKey) -> None:
         self._index_add(att, slot)
+        js = self.jobs.get(att.spec.job_id)
+        if js is not None and not js.n_suspended(att.spec.phase):
+            self._jobs_suspended[att.spec.phase.value].pop(
+                att.spec.job_id, None
+            )
 
     def on_task_suspended(self, att: TaskAttempt) -> None:
         self._index_remove(att.spec.key)
+        self._jobs_suspended[att.spec.phase.value][att.spec.job_id] = None
 
     def on_task_killed(self, att: TaskAttempt) -> None:
         self._index_remove(att.spec.key)
+        # KILL re-queues the task: the job has pending demand again.
+        self._jobs_pending[att.spec.phase.value][att.spec.job_id] = None
 
     def _index_add(self, att: TaskAttempt, slot: SlotKey) -> None:
         key = att.spec.key
@@ -266,6 +379,37 @@ class Scheduler(abc.ABC):
         self._jobs_running[pv].clear()
         for slot, att in occ.items():
             self._index_add(att, slot)
+        self._rebuild_demand_indexes(phase)
+
+    def _demand_reference(
+        self, phase: Phase
+    ) -> tuple[dict[int, None], dict[int, None], int]:
+        """(pending, suspended, phase-live count) recomputed from the
+        live-job table — the single definition of phase-liveness, shared
+        by the resync fallback and the paranoid cross-check."""
+        pend: dict[int, None] = {}
+        susp: dict[int, None] = {}
+        n_live = 0
+        for jid, js in self._live.items():
+            if phase is Phase.REDUCE and not js.reduce_unlocked():
+                continue
+            if not js.n_unfinished(phase):
+                continue
+            n_live += 1
+            if js.n_pending(phase):
+                pend[jid] = None
+            if js.n_suspended(phase):
+                susp[jid] = None
+        return pend, susp, n_live
+
+    def _rebuild_demand_indexes(self, phase: Phase) -> None:
+        """Recompute this phase's demand indexes from the live-job table
+        (the resync fallback for hook-less executors)."""
+        pv = phase.value
+        pend, susp, n_live = self._demand_reference(phase)
+        self._jobs_pending[pv] = pend
+        self._jobs_suspended[pv] = susp
+        self._n_live_phase[pv] = n_live
 
     def _paranoid_check(self, view: ClusterView, phase: Phase) -> None:
         """Rebuild reference indexes from the view and assert the
@@ -301,6 +445,23 @@ class Scheduler(abc.ABC):
         assert self._jobs_running[pv] == set(ref_by_job), (
             f"jobs_running mismatch ({phase})"
         )
+        # Demand indexes: membership must equal a rebuild from the live
+        # table (order inside the dict-sets is not semantically relevant —
+        # every consumer re-sorts — so membership equality is the contract).
+        pend_d, susp_d, ref_live = self._demand_reference(phase)
+        ref_pend, ref_susp = set(pend_d), set(susp_d)
+        assert set(self._jobs_pending[pv]) == ref_pend, (
+            f"jobs_pending mismatch ({phase}): "
+            f"{set(self._jobs_pending[pv])} != {ref_pend}"
+        )
+        assert set(self._jobs_suspended[pv]) == ref_susp, (
+            f"jobs_suspended mismatch ({phase}): "
+            f"{set(self._jobs_suspended[pv])} != {ref_susp}"
+        )
+        assert self._n_live_phase[pv] == ref_live, (
+            f"n_live_phase mismatch ({phase}): "
+            f"{self._n_live_phase[pv]} != {ref_live}"
+        )
 
     # -- decisions -----------------------------------------------------------
     @abc.abstractmethod
@@ -309,12 +470,54 @@ class Scheduler(abc.ABC):
 
     # -- shared helpers --------------------------------------------------------
     def live_jobs(self, phase: Phase) -> list[JobState]:
-        out = []
-        for js in self._live.values():
+        """Phase-live jobs (>=1 unfinished task, REDUCE gated on unlock).
+
+        Served from the demand indexes: the membership union
+        pending | suspended | running *is* the phase-live set (every
+        unfinished task is in exactly one of those three states), so this
+        is O(phase-live) instead of O(all live jobs)."""
+        return list(self.demand_union(phase).values())
+
+    def demand_union(self, phase: Phase) -> dict[int, JobState]:
+        """{job_id: JobState} of jobs with any demand in ``phase`` —
+        pending, suspended, or running tasks.  Deterministic (index
+        insertion order; callers needing a specific order re-sort with a
+        total key).  This is the one iteration path all three policies
+        share; its size is ``n_live_phase(phase)``."""
+        jobs = self.jobs
+        out: dict[int, JobState] = {}
+        for jid in self._jobs_pending[phase.value]:
+            out[jid] = jobs[jid]
+        for jid in self._jobs_suspended[phase.value]:
+            if jid not in out:
+                out[jid] = jobs[jid]
+        for jid in self._jobs_running[phase.value]:
+            if jid not in out:
+                out[jid] = jobs[jid]
+        return out
+
+    def n_live_phase(self, phase: Phase) -> int:
+        """O(1) count of phase-live jobs (== len(live_jobs(phase)))."""
+        return self._n_live_phase[phase.value]
+
+    def live_jobs_scan(self, phase: Phase) -> dict[int, JobState]:
+        """Phase-live jobs recomputed straight from the live-job table —
+        O(all live jobs), no demand indexes involved.  The
+        ``demand_indexed=False`` legacy passes derive phase-liveness,
+        fair-share denominators, and the training-module probes from this
+        scan, keeping them a reference that is free of the PR-4 demand
+        and training indexes: a membership bug there diverges the two
+        modes and is caught by the equivalence suite (an index-backed
+        legacy walk would reproduce the corruption bit for bit).  The
+        PR-1 run-state indexes (slot_of / run_by_job / jobs_running and
+        the training _active registry) remain shared by both modes —
+        those are cross-checked by ``paranoid_indexes`` instead."""
+        out: dict[int, JobState] = {}
+        for jid, js in self._live.items():
             if phase is Phase.REDUCE and not js.reduce_unlocked():
                 continue
             if js.n_unfinished(phase):
-                out.append(js)
+                out[jid] = js
         return out
 
     def _demand(self, js: JobState, phase: Phase) -> int:
@@ -474,3 +677,29 @@ class Scheduler(abc.ABC):
 
 def job_sort_key_fifo(js: JobState) -> tuple:
     return (-js.spec.weight, js.spec.arrival_time, js.spec.job_id)
+
+
+class LazySet:
+    """Set-like view materialized on first membership test.
+
+    Used for pass-scoped sets that are expensive to build but rarely
+    consulted (e.g. the preemption-protected sample keys: only preemption
+    walks read them, and most passes never preempt).  The factory runs at
+    most once; until then the set costs nothing."""
+
+    __slots__ = ("_factory", "_set")
+
+    def __init__(self, factory):
+        self._factory = factory
+        self._set: set | None = None
+
+    def materialize(self) -> set:
+        if self._set is None:
+            self._set = self._factory()
+        return self._set
+
+    def __contains__(self, key) -> bool:
+        return key in self.materialize()
+
+    def __len__(self) -> int:
+        return len(self.materialize())

@@ -307,6 +307,11 @@ class VirtualCluster:
         # aging touches; rebuilt together with the allocation.
         self._allocated_cache: list[tuple[_VJob, int]] | None = None
         self._order_cache: list[int] | None = None
+        # {job_id: position in _order_cache}, derived lazily from the
+        # order cache (same invalidation) — the demand-indexed scheduler
+        # sorts only actionable jobs by position instead of walking the
+        # whole order list every pass.
+        self._pos_cache: dict[int, int] | None = None
         # Lazy aging: deferred per-event dt increments, replayed in order
         # by _materialize() (see module docstring).
         self._pending_dts: list[float] = []
@@ -325,6 +330,7 @@ class VirtualCluster:
 
     def _invalidate_order(self) -> None:
         self._order_cache = None
+        self._pos_cache = None
 
     # -- membership ---------------------------------------------------------
     def add_job(
@@ -592,6 +598,7 @@ class VirtualCluster:
         (the scheduler's batched cross-phase warm).  ``fin`` must be this
         cluster's own projected finish map at the current virtual time."""
         self._order_cache = self._order_from_fin(fin)
+        self._pos_cache = None
 
     def schedule_order(self, now: float) -> list[int]:
         """Job ids sorted by projected finish time, ties by id (FIFO-ish).
@@ -601,4 +608,15 @@ class VirtualCluster:
         correct no matter how much un-replayed aging is queued."""
         if self._order_cache is None:
             self._order_cache = self._order_from_fin(self.projected_finish(now))
+            self._pos_cache = None
         return self._order_cache
+
+    def schedule_pos(self, now: float) -> dict[int, int]:
+        """{job_id: position in schedule_order(now)} — cached together
+        with the order, so steady-state passes pay O(1) for position
+        lookups instead of rebuilding the map per pass."""
+        if self._pos_cache is None:
+            self._pos_cache = {
+                j: i for i, j in enumerate(self.schedule_order(now))
+            }
+        return self._pos_cache

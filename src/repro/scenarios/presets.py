@@ -119,6 +119,25 @@ def _paper_estimation_error() -> SweepSpec:
     )
 
 
+@register_preset("paper-fb-eps")
+def _paper_fb_eps() -> SweepSpec:
+    """Beyond-paper: the Fig. 3 comparison under epsilon-window event
+    coalescing (arXiv 1306.6023's batching design) — policy x epsilon
+    grid reporting the sojourn-vs-scheduler-overhead tradeoff per cell
+    (each report carries ``scheduler_passes`` / ``passes_per_event``;
+    eps=0 cells are bit-identical to ``paper-fb``)."""
+    return SweepSpec(
+        name="paper-fb-eps",
+        base=paper_fb_base(),
+        grids=(
+            SweepSpec.grid(**{
+                "scheduler.policy": ("fifo", "fair", "hfsp"),
+                "event_epsilon": (0.0, 0.5, 2.0),
+            }),
+        ),
+    )
+
+
 @register_preset("paper-preemption")
 def _paper_preemption() -> SweepSpec:
     """Sect. 4.4 axis on the FB trace: HFSP under EAGER / WAIT / KILL."""

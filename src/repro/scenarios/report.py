@@ -71,6 +71,12 @@ def scenario_report(
         },
         "locality_fraction": res.locality_fraction,
         "completion_fingerprint": completion_fingerprint(res),
+        # Scheduler-overhead counters: the epsilon-window axis trades
+        # pass count (overhead) against sojourn quality; sweeps read the
+        # tradeoff per cell from here.
+        "events": res.events,
+        "scheduler_passes": res.passes,
+        "passes_per_event": round(res.passes / res.events, 4) if res.events else 0.0,
         "stats": {
             "suspensions": st.suspensions,
             "resumes": st.resumes,

@@ -21,6 +21,7 @@ from repro.core import (
     HFSPConfig,
     HFSPScheduler,
     Preemption,
+    SimConfig,
     SimResult,
     Simulator,
 )
@@ -109,7 +110,14 @@ def _materialize_and_run(
     cluster = build_cluster(spec)
     jobs, class_of = build_workload(spec)
     sch = build_scheduler(spec, cluster)
-    res = Simulator(cluster, sch, jobs, heartbeat=spec.heartbeat).run()
+    res = Simulator(
+        cluster,
+        sch,
+        jobs,
+        config=SimConfig(
+            heartbeat=spec.heartbeat, event_epsilon=spec.event_epsilon
+        ),
+    ).run()
     return res, class_of, sch, jobs
 
 

@@ -118,6 +118,12 @@ class ScenarioSpec:
     cluster: ClusterAxis = field(default_factory=ClusterAxis)
     scheduler: SchedulerAxis = field(default_factory=SchedulerAxis)
     heartbeat: float = 3.0
+    #: Simulator epsilon-window event coalescing (seconds; 0 = a pass per
+    #: event, bit-identical to the legacy loop — see
+    #: repro.core.simulator.SimConfig.event_epsilon).  A spec axis so
+    #: sweeps can report the sojourn-vs-scheduler-overhead tradeoff per
+    #: cell (the ``paper-fb-eps`` preset).
+    event_epsilon: float = 0.0
 
     # -- JSON round-trip -----------------------------------------------------
     def to_dict(self) -> dict:
@@ -128,6 +134,7 @@ class ScenarioSpec:
             "cluster": _axis_dict(self.cluster),
             "scheduler": _axis_dict(self.scheduler),
             "heartbeat": self.heartbeat,
+            "event_epsilon": self.event_epsilon,
         }
 
     @classmethod
@@ -143,6 +150,7 @@ class ScenarioSpec:
             cluster=ClusterAxis(**d.get("cluster", {})),
             scheduler=SchedulerAxis(**d.get("scheduler", {})),
             heartbeat=d.get("heartbeat", 3.0),
+            event_epsilon=d.get("event_epsilon", 0.0),
         )
 
     # -- identity ------------------------------------------------------------

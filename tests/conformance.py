@@ -41,28 +41,47 @@ def run_trace(
     vc_auto_threshold: int | None = None,
     num_jobs: int = 30,
     num_machines: int = 20,
+    demand_indexed: bool = True,
+    event_epsilon: float = 0.0,
 ) -> dict:
     """One FB-trace simulation; returns the comparable outcome summary.
 
     ``vc_backend`` selects the virtual-cluster kernel backend for the HFSP
     variants (fifo/fair have no virtual cluster and ignore it);
     ``vc_auto_threshold`` sets the "auto" backend's numpy->jax latch point
-    (None keeps the production default).
+    (None keeps the production default).  ``demand_indexed=False`` runs
+    the legacy full-walk scheduling passes (must be bit-identical);
+    ``event_epsilon`` sets the simulator's coalescing window (0 = legacy
+    pass-per-event loop, also bit-identical).
     """
     cluster = fb_cluster(num_machines=num_machines)
     jobs, _ = fb_dataset(seed=seed, num_jobs=num_jobs)
     if name == "fifo":
-        sch = FIFOScheduler(cluster, SchedulerConfig(paranoid_indexes=paranoid))
+        sch = FIFOScheduler(
+            cluster,
+            SchedulerConfig(
+                paranoid_indexes=paranoid, demand_indexed=demand_indexed
+            ),
+        )
     elif name == "fair":
-        sch = FairScheduler(cluster, SchedulerConfig(paranoid_indexes=paranoid))
+        sch = FairScheduler(
+            cluster,
+            SchedulerConfig(
+                paranoid_indexes=paranoid, demand_indexed=demand_indexed
+            ),
+        )
     else:
-        cfg = HFSPConfig(paranoid_indexes=paranoid, vc_backend=vc_backend)
+        cfg = HFSPConfig(
+            paranoid_indexes=paranoid,
+            vc_backend=vc_backend,
+            demand_indexed=demand_indexed,
+        )
         if vc_auto_threshold is not None:
             cfg.vc_auto_threshold = vc_auto_threshold
         if name == "hfsp-kill":
             cfg.preemption = Preemption.KILL
         sch = HFSPScheduler(cluster, cfg)
-    res = Simulator(cluster, sch, jobs).run()
+    res = Simulator(cluster, sch, jobs, event_epsilon=event_epsilon).run()
     st = res.stats
     return {
         "completion": dict(res.completion),
@@ -70,6 +89,7 @@ def run_trace(
         "preemption": (st.suspensions, st.resumes, st.kills, st.waits),
         "delay": st.delay_sched_waits,
         "training": st.training_tasks,
+        "passes": res.passes,
     }
 
 
@@ -84,5 +104,5 @@ def assert_traces_equal(a: dict, b: dict) -> None:
     )
     diffs = {j: (ca[j], cb[j]) for j in ca if ca[j] != cb[j]}
     assert not diffs, f"completion times differ (job: (a, b)): {diffs}"
-    for key in ("locality", "preemption", "delay", "training"):
+    for key in ("locality", "preemption", "delay", "training", "passes"):
         assert a[key] == b[key], f"{key} differs: {a[key]} != {b[key]}"

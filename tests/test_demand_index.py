@@ -1,0 +1,295 @@
+"""Demand-indexed scheduling core: equivalence, invariants, unit updates.
+
+The base scheduler keeps per-phase demand indexes (``_jobs_pending`` /
+``_jobs_suspended`` / ``_jobs_running`` + an O(1) phase-live counter) so a
+scheduling pass iterates only jobs with actionable demand.  Contract
+(mirrors the PR-1 run-state engine):
+
+* ``SchedulerConfig.demand_indexed=False`` falls back to the legacy full
+  walk over every phase-live job and must produce bit-identical schedules
+  (completions, locality, preemption stats, pass counts);
+* ``SchedulerConfig.paranoid_indexes=True`` rebuilds reference demand
+  sets from the live-job table every pass and asserts membership equality
+  — drift raises inside the run;
+* index membership updates are O(1) per executor event: arrival, task
+  start/resume/suspend/kill, completion, the REDUCE slow-start unlock.
+"""
+
+import pytest
+
+from conformance import TRACE_SCHEDULERS, assert_traces_equal, run_trace
+from repro.core import (
+    ClusterSpec,
+    FIFOScheduler,
+    HFSPConfig,
+    HFSPScheduler,
+    Phase,
+    Simulator,
+)
+from repro.core.types import JobSpec, TaskSpec, TaskState
+from repro.workload import fb_cluster, fb_dataset
+
+
+@pytest.mark.parametrize("name", TRACE_SCHEDULERS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_demand_indexed_matches_legacy_walk(name, seed):
+    """Legacy full-walk passes and demand-indexed passes must schedule
+    bit-identically (the pre-filter + position cutoff only skip provable
+    no-ops)."""
+    indexed = run_trace(name, seed, demand_indexed=True)
+    legacy = run_trace(name, seed, demand_indexed=False)
+    assert_traces_equal(indexed, legacy)
+
+
+@pytest.mark.parametrize("name", TRACE_SCHEDULERS)
+def test_paranoid_demand_indexes_hold(name):
+    """The paranoid cross-check (which now also rebuilds the demand sets
+    from the live table every pass) must hold over a full golden trace."""
+    checked = run_trace(name, 0, paranoid=True)
+    plain = run_trace(name, 0)
+    assert_traces_equal(checked, plain)
+
+
+def test_paranoid_detects_demand_corruption():
+    """Corrupting a demand index mid-run must trip the paranoid check."""
+    cluster = fb_cluster(num_machines=4)
+    jobs, _ = fb_dataset(seed=0, num_jobs=10)
+    sch = HFSPScheduler(cluster, HFSPConfig(paranoid_indexes=True))
+
+    orig = sch.on_task_started
+    calls = {"n": 0}
+
+    def corrupting_hook(att, slot):
+        orig(att, slot)
+        calls["n"] += 1
+        if calls["n"] == 5:
+            # Claim pending demand for a job that has none.
+            sch._jobs_pending[Phase.MAP.value][10**6] = None
+
+    sch.on_task_started = corrupting_hook
+    with pytest.raises(AssertionError):
+        Simulator(cluster, sch, jobs).run()
+
+
+def _job(jid, n_map=3, n_reduce=2, dur=5.0, slowstart=1.0, arrival=0.0):
+    return JobSpec(
+        job_id=jid,
+        arrival_time=arrival,
+        map_tasks=tuple(TaskSpec(jid, Phase.MAP, i, dur) for i in range(n_map)),
+        reduce_tasks=tuple(
+            TaskSpec(jid, Phase.REDUCE, i, dur) for i in range(n_reduce)
+        ),
+        reduce_slowstart=slowstart,
+    )
+
+
+def test_index_updates_through_task_lifecycle():
+    """Arrival / start / suspend / resume / kill / complete each leave the
+    demand sets exactly matching a brute-force recount."""
+    sch = FIFOScheduler(ClusterSpec(num_machines=2))
+    js = sch.on_job_arrival(_job(1), 0.0)
+    mv, rv = Phase.MAP.value, Phase.REDUCE.value
+    assert set(sch._jobs_pending[mv]) == {1}
+    assert set(sch._jobs_pending[rv]) == set()  # reduce locked (slowstart 1)
+    assert sch.n_live_phase(Phase.MAP) == 1
+    assert sch.n_live_phase(Phase.REDUCE) == 0
+
+    from repro.core.types import SlotKey
+
+    atts = [js.tasks[(1, "map", i)] for i in range(3)]
+    slot = SlotKey(0, Phase.MAP, 0)
+    for i, att in enumerate(atts):
+        js.transition(att, TaskState.RUNNING)
+        att.machine = 0
+        sch.on_task_started(att, SlotKey(0, Phase.MAP, i))
+    assert set(sch._jobs_pending[mv]) == set()  # all dispatched
+    assert 1 in sch._jobs_running[mv]
+
+    js.transition(atts[0], TaskState.SUSPENDED)
+    sch.on_task_suspended(atts[0])
+    assert set(sch._jobs_suspended[mv]) == {1}
+    js.transition(atts[0], TaskState.RUNNING)
+    sch.on_task_resumed(atts[0], slot)
+    assert set(sch._jobs_suspended[mv]) == set()
+
+    # KILL re-queues: pending demand reappears.
+    js.transition(atts[1], TaskState.PENDING)
+    sch.on_task_killed(atts[1])
+    assert set(sch._jobs_pending[mv]) == {1}
+
+    # Complete every MAP task: phase drains, REDUCE unlocks and registers.
+    for i, att in enumerate(atts):
+        if att.state is not TaskState.RUNNING:
+            js.transition(att, TaskState.RUNNING)
+            sch.on_task_started(att, SlotKey(1, Phase.MAP, i))
+        js.transition(att, TaskState.DONE)
+        sch.on_task_complete(1, att.spec.key, 10.0 + i)
+    assert sch.n_live_phase(Phase.MAP) == 0
+    assert set(sch._jobs_pending[mv]) == set()
+    assert 1 not in sch._jobs_running[mv]
+    assert sch.n_live_phase(Phase.REDUCE) == 1
+    assert set(sch._jobs_pending[rv]) == {1}
+
+
+def test_reduce_registration_is_once_and_respects_slowstart():
+    """REDUCE demand registers exactly when the slow-start fraction is
+    crossed, and only once."""
+    sch = FIFOScheduler(ClusterSpec(num_machines=2))
+    js = sch.on_job_arrival(_job(2, n_map=4, slowstart=0.5), 0.0)
+    rv = Phase.REDUCE.value
+    assert set(sch._jobs_pending[rv]) == set()
+
+    from repro.core.types import SlotKey
+
+    keys = [(2, "map", i) for i in range(4)]
+    for i, key in enumerate(keys):
+        att = js.tasks[key]
+        js.transition(att, TaskState.RUNNING)
+        sch.on_task_started(att, SlotKey(0, Phase.MAP, i))
+    # First completion: fraction 0.25 < 0.5 -> still locked.
+    js.transition(js.tasks[keys[0]], TaskState.DONE)
+    sch.on_task_complete(2, keys[0], 1.0)
+    assert set(sch._jobs_pending[rv]) == set()
+    # Second completion crosses 0.5 -> registered.
+    js.transition(js.tasks[keys[1]], TaskState.DONE)
+    sch.on_task_complete(2, keys[1], 2.0)
+    assert set(sch._jobs_pending[rv]) == {2}
+    assert sch.n_live_phase(Phase.REDUCE) == 1
+    # Further completions must not double-register (count stays 1).
+    js.transition(js.tasks[keys[2]], TaskState.DONE)
+    sch.on_task_complete(2, keys[2], 3.0)
+    assert sch.n_live_phase(Phase.REDUCE) == 1
+
+    # slowstart=0 (or no map tasks): registered at arrival.
+    sch2 = FIFOScheduler(ClusterSpec(num_machines=2))
+    sch2.on_job_arrival(_job(3, slowstart=0.0), 0.0)
+    assert set(sch2._jobs_pending[rv]) == {3}
+    sch3 = FIFOScheduler(ClusterSpec(num_machines=2))
+    sch3.on_job_arrival(_job(4, n_map=0), 0.0)
+    assert set(sch3._jobs_pending[rv]) == {4}
+
+
+def test_live_jobs_served_from_demand_union():
+    """live_jobs()/demand_union membership equals the brute-force
+    recount at arbitrary points of a real simulation."""
+    cluster = fb_cluster(num_machines=6)
+    jobs, _ = fb_dataset(seed=1, num_jobs=15)
+    sch = HFSPScheduler(cluster)
+    sim = Simulator(cluster, sch, jobs)
+    for until in (50.0, 200.0, 800.0, 3000.0):
+        sim.run(until=until)
+        for phase in (Phase.MAP, Phase.REDUCE):
+            ref = {
+                js.spec.job_id
+                for js in sch._live.values()
+                if js.n_unfinished(phase)
+                and (phase is Phase.MAP or js.reduce_unlocked())
+            }
+            got = set(sch.demand_union(phase))
+            assert got == ref, f"{phase} at t={until}: {got} != {ref}"
+            assert sch.n_live_phase(phase) == len(ref)
+            assert {j.spec.job_id for j in sch.live_jobs(phase)} == ref
+
+
+def test_training_demand_indexes_track_sample_states():
+    """The Training module's wanted / running-sample indexes must agree
+    with a brute-force probe of every active job's sample-task states at
+    arbitrary points of a real simulation."""
+    cluster = fb_cluster(num_machines=6)
+    jobs, _ = fb_dataset(seed=2, num_jobs=15)
+    sch = HFSPScheduler(cluster)
+    sim = Simulator(cluster, sch, jobs)
+    for until in (30.0, 120.0, 600.0, 2500.0):
+        sim.run(until=until)
+        tm = sch.training
+        for phase in (Phase.MAP, Phase.REDUCE):
+            ref_wanted, ref_running = set(), {}
+            for jid in tm.active_jobs(phase):
+                js = sch.jobs[jid]
+                st = tm._training[(jid, phase)]
+                for key in st.sample_keys:
+                    att = js.tasks[key]
+                    if (
+                        att.state is TaskState.PENDING
+                        and key not in st.observed
+                    ):
+                        ref_wanted.add(jid)
+                    elif att.state is TaskState.RUNNING:
+                        ref_running.setdefault(jid, []).append(key)
+            assert set(tm.wanted_jobs(phase)) == ref_wanted
+            got_running = {
+                j: list(ks) for j, ks in tm.running_sample_jobs(phase).items()
+            }
+            assert got_running == ref_running
+            assert tm.n_running_samples(phase) == sum(
+                len(v) for v in ref_running.values()
+            )
+
+
+def test_paranoid_covers_training_indexes():
+    """Corrupting the Training module's wanted index must trip the
+    paranoid pass (the training demand indexes share the hook-update
+    contract and its safety net)."""
+    cluster = fb_cluster(num_machines=4)
+    jobs, _ = fb_dataset(seed=0, num_jobs=10)
+    sch = HFSPScheduler(cluster, HFSPConfig(paranoid_indexes=True))
+
+    orig = sch.on_task_started
+    calls = {"n": 0}
+
+    def corrupting_hook(att, slot):
+        orig(att, slot)
+        calls["n"] += 1
+        if calls["n"] == 5:
+            sch.training._wanted[Phase.MAP][10**6] = None
+
+    sch.on_task_started = corrupting_hook
+    with pytest.raises(AssertionError, match="training wanted"):
+        Simulator(cluster, sch, jobs).run()
+
+
+def test_fifo_requeues_on_kill():
+    """The public on_task_killed hook re-adds pending demand; FIFO must
+    re-enqueue the job even after its queue entry was compacted away."""
+    from repro.core.types import SlotKey
+
+    sch = FIFOScheduler(ClusterSpec(num_machines=2))
+    js = sch.on_job_arrival(_job(9, n_map=2, n_reduce=0), 0.0)
+    mv = Phase.MAP.value
+    atts = [js.tasks[(9, "map", i)] for i in range(2)]
+    for i, att in enumerate(atts):
+        js.transition(att, TaskState.RUNNING)
+        att.machine = 0
+        sch.on_task_started(att, SlotKey(0, Phase.MAP, i))
+    # Simulate compaction dropping the (now dead) entry.
+    sch._queue[mv] = []
+    sch._queued[mv] = set()
+    # Kill one task: pending demand reappears and must be re-queued.
+    js.transition(atts[0], TaskState.PENDING)
+    sch.on_task_killed(atts[0])
+    assert set(sch._jobs_pending[mv]) == {9}
+    assert [e[1] for e in sch._queue[mv]] == [9]
+    sch._check_queue(Phase.MAP)  # paranoid invariant holds
+    # A second kill while the entry is live must not duplicate it.
+    js.transition(atts[1], TaskState.PENDING)
+    sch.on_task_killed(atts[1])
+    assert [e[1] for e in sch._queue[mv]] == [9]
+
+
+def test_fifo_queue_matches_full_resort():
+    """FIFO's arrival-ordered queue (paranoid-checked in-run) must match
+    a full re-sort, including weighted jobs and the REDUCE unlock path."""
+    import dataclasses
+
+    cluster = fb_cluster(num_machines=6)
+    jobs, _ = fb_dataset(seed=0, num_jobs=15)
+    # Give a few jobs higher weight so the queue order isn't pure arrival.
+    jobs = [
+        dataclasses.replace(j, weight=2.0) if j.job_id % 4 == 0 else j
+        for j in jobs
+    ]
+    from repro.core import SchedulerConfig
+
+    sch = FIFOScheduler(cluster, SchedulerConfig(paranoid_indexes=True))
+    res = Simulator(cluster, sch, jobs).run()
+    assert len(res.completion) == len(jobs)

@@ -1,0 +1,253 @@
+"""Epsilon-window event coalescing: determinism and conformance.
+
+The simulator's ``event_epsilon`` knob batches near-timestamp events into
+one scheduling pass (arXiv 1306.6023's design).  The determinism contract
+(docs/scheduler_internals.md):
+
+* ``eps=0`` is bit-identical to the legacy pass-per-event loop — same
+  completions, stats, AND pass counts — for every scheduler and
+  virtual-cluster backend (this is why eps=0 stays the default);
+* any ``eps>0`` run is a pure function of the event stream: repeated
+  in-process runs and fresh-process runs produce identical schedules
+  (template: the lazy-aging determinism suite in test_vcluster_jax.py);
+* coalescing cuts pass counts on bursty traces (the overhead win the
+  epsilon sweep in bench_sched_overhead quantifies).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from conformance import (
+    GOLDEN_SEEDS,
+    TRACE_SCHEDULERS,
+    assert_traces_equal,
+    run_trace,
+)
+
+def _backend_params():
+    """Virtual-cluster backends crossed with the eps=0 conformance rows:
+    numpy (reference), jax (jitted kernels), auto (mid-trace latch) —
+    the jax-dependent ones skip when jax is unavailable."""
+    out = ["numpy"]
+    try:
+        import jax  # noqa: F401
+
+        out.extend(["jax", "auto"])
+    except Exception:
+        out.extend(
+            pytest.param(b, marks=pytest.mark.skip(reason="no jax"))
+            for b in ("jax", "auto")
+        )
+    return out
+
+
+@pytest.mark.parametrize("seed", GOLDEN_SEEDS)
+@pytest.mark.parametrize("name", ("fifo", "fair", "hfsp"))
+def test_eps_zero_bit_identical_to_seed(name, seed):
+    """An explicit eps=0 run must equal the default run bit for bit,
+    including the pass count (the conformance floor for the new loop)."""
+    ref = run_trace(name, seed)
+    eps0 = run_trace(name, seed, event_epsilon=0.0)
+    assert_traces_equal(ref, eps0)
+
+
+@pytest.mark.parametrize("backend", _backend_params())
+@pytest.mark.parametrize("name", ("hfsp", "hfsp-kill"))
+def test_eps_zero_bit_identical_across_backends(name, backend):
+    """eps=0 conformance holds on every virtual-cluster backend."""
+    ref = run_trace(name, 0, vc_backend=backend)
+    eps0 = run_trace(name, 0, vc_backend=backend, event_epsilon=0.0)
+    assert_traces_equal(ref, eps0)
+
+
+@pytest.mark.parametrize("eps", (0.5, 2.0))
+@pytest.mark.parametrize("name", TRACE_SCHEDULERS)
+def test_eps_runs_reproducible_in_process(name, eps):
+    """Two fresh simulations at the same eps must agree exactly —
+    completions, stats, and pass counts."""
+    a = run_trace(name, 0, event_epsilon=eps)
+    b = run_trace(name, 0, event_epsilon=eps)
+    assert_traces_equal(a, b)
+
+
+def _trace_fingerprint(summary: dict) -> list:
+    return [
+        sorted(summary["completion"].items()),
+        summary["preemption"],
+        summary["locality"],
+        summary["delay"],
+        summary["training"],
+        summary["passes"],
+    ]
+
+
+def test_eps_run_reproducible_across_process_restart():
+    """An eps>0 schedule is a pure function of the event stream: a fresh
+    interpreter must reproduce it exactly (no process-lifetime state —
+    set ordering, hash seeds, jit caches — may leak into the schedule)."""
+    here = run_trace("hfsp", 0, num_jobs=15, num_machines=10,
+                     event_epsilon=1.5)
+    prog = (
+        "import sys, json; sys.path[:0] = [{src!r}, {tests!r}]\n"
+        "from conformance import run_trace\n"
+        "s = run_trace('hfsp', 0, num_jobs=15, num_machines=10, "
+        "event_epsilon=1.5)\n"
+        "s['completion'] = sorted(s['completion'].items())\n"
+        "print(json.dumps(s))"
+    ).format(
+        src=os.path.join(os.path.dirname(__file__), "..", "src"),
+        tests=os.path.dirname(__file__),
+    )
+    env = dict(os.environ, PYTHONHASHSEED="42")  # differ on purpose
+    out = subprocess.run(
+        [sys.executable, "-c", prog],
+        capture_output=True, text=True, env=env, check=True,
+    )
+    remote = json.loads(out.stdout)
+    assert remote["completion"] == [
+        [k, v] for k, v in sorted(here["completion"].items())
+    ]
+    for key in ("locality", "preemption", "delay", "training", "passes"):
+        got = remote[key]
+        want = here[key]
+        if isinstance(want, tuple):
+            want = list(want)
+        assert got == want, f"{key}: {got} != {want}"
+
+
+def test_eps_cuts_pass_count_on_bursty_trace():
+    """Coalescing must measurably reduce passes at equal workload (every
+    run drains the same 30-job trace to completion)."""
+    base = run_trace("hfsp", 0, event_epsilon=0.0)
+    half = run_trace("hfsp", 0, event_epsilon=0.5)
+    wide = run_trace("hfsp", 0, event_epsilon=5.0)
+    assert set(half["completion"]) == set(base["completion"])
+    assert set(wide["completion"]) == set(base["completion"])
+    assert half["passes"] < base["passes"]
+    assert wide["passes"] < half["passes"]
+
+
+def test_until_is_a_window_barrier_and_max_events_is_not():
+    """run(until=T) flushes the pending pass at the barrier (callers see
+    fully-scheduled state), while max_events slicing preserves the open
+    window and replays the unsliced schedule exactly."""
+    from repro.core import ClusterSpec, FIFOScheduler, Simulator
+    from repro.core.simulator import EventLimitReached
+    from repro.core.types import JobSpec, Phase, TaskSpec
+
+    cluster = ClusterSpec(num_machines=1, map_slots_per_machine=2,
+                          reduce_slots_per_machine=0)
+
+    def jobs():
+        return [
+            JobSpec(0, 4.9, (TaskSpec(0, Phase.MAP, 0, 5.0),), ()),
+            JobSpec(1, 5.5, (TaskSpec(1, Phase.MAP, 0, 5.0),), ()),
+        ]
+
+    # Unsliced: both arrivals share one eps=2 window -> both start at 5.5.
+    ref = Simulator(cluster, FIFOScheduler(cluster), jobs(),
+                    event_epsilon=2.0).run()
+    assert ref.completion == {0: 10.5, 1: 10.5}
+
+    # until=5.0 barrier: the t=4.9 arrival's pass flushes at the barrier
+    # (job 0 starts at 4.9), then the t=5.5 arrival anchors a new window.
+    sliced = Simulator(cluster, FIFOScheduler(cluster), jobs(),
+                       event_epsilon=2.0)
+    sliced.run(until=5.0)
+    assert sliced._window_end is None  # no window left open at a barrier
+    res = sliced.run()
+    assert res.completion == {0: 9.9, 1: 10.5}
+
+    # max_events slicing: window survives the budget exception and the
+    # continued run reproduces the unsliced schedule bit for bit.
+    chunked = Simulator(cluster, FIFOScheduler(cluster), jobs(),
+                        event_epsilon=2.0)
+    while True:
+        try:
+            res = chunked.run(max_events=1)
+            break
+        except EventLimitReached:
+            continue
+    assert res.completion == ref.completion
+    assert chunked.passes == ref.passes
+
+
+def test_until_barrier_flushes_window_left_open_by_event_budget():
+    """A max_events slice can raise with a window open; a following
+    run(until=T) whose barrier lands before the window's next event must
+    still flush the deferred pass before returning (the caller observes
+    fully-scheduled state at the barrier)."""
+    from repro.core import ClusterSpec, FIFOScheduler, Simulator
+    from repro.core.simulator import EventLimitReached
+    from repro.core.types import JobSpec, Phase, TaskSpec
+
+    cluster = ClusterSpec(num_machines=1, map_slots_per_machine=2,
+                          reduce_slots_per_machine=0)
+    jobs = [
+        JobSpec(0, 4.9, (TaskSpec(0, Phase.MAP, 0, 5.0),), ()),
+        JobSpec(1, 5.5, (TaskSpec(1, Phase.MAP, 0, 5.0),), ()),
+    ]
+    sim = Simulator(cluster, FIFOScheduler(cluster), jobs,
+                    event_epsilon=2.0)
+    # Slice the first event: t=5.5 is inside the t=4.9+2.0 window, so the
+    # budget exception leaves the window open...
+    with pytest.raises(EventLimitReached):
+        sim.run(max_events=1)
+    assert sim._window_end is not None
+    # ...and an until-barrier below the next event must flush the pass —
+    # even under a minimal event budget: the barrier iteration processes
+    # no event, so it cannot be preempted by EventLimitReached.
+    sim.run(until=5.0, max_events=1)
+    assert sim._window_end is None
+    assert sim.scheduler.jobs[0].n_running(Phase.MAP) == 1
+    res = sim.run()
+    assert res.completion == {0: 9.9, 1: 10.5}
+
+
+def test_simconfig_rejects_conflicting_kwargs():
+    """config=SimConfig(...) replaces the individual executor knobs;
+    passing both must raise instead of silently dropping one side."""
+    from repro.core import ClusterSpec, FIFOScheduler, SimConfig, Simulator
+
+    cluster = ClusterSpec(num_machines=1)
+    sch = FIFOScheduler(cluster)
+    with pytest.raises(ValueError, match="track_timeline"):
+        Simulator(
+            cluster, sch, [], track_timeline=True,
+            config=SimConfig(event_epsilon=0.5),
+        )
+    # Config alone is fine and applies its knobs.
+    sim = Simulator(
+        cluster, sch, [], config=SimConfig(event_epsilon=0.5, heartbeat=7.0)
+    )
+    assert sim.event_epsilon == 0.5 and sim.heartbeat == 7.0
+
+
+def test_eps_window_applies_mutations_at_own_timestamps():
+    """Completion times recorded inside a window keep their own event
+    timestamps — only the scheduling pass moves to the window end."""
+    from repro.core import ClusterSpec, FIFOScheduler, Simulator
+    from repro.core.types import JobSpec, Phase, TaskSpec
+
+    cluster = ClusterSpec(num_machines=1, map_slots_per_machine=2,
+                          reduce_slots_per_machine=0)
+    # Two single-task jobs arriving 0.3s apart, durations chosen so the
+    # completions land 0.3s apart too — inside one eps=1 window.
+    jobs = [
+        JobSpec(0, 0.0, (TaskSpec(0, Phase.MAP, 0, 5.0),), ()),
+        JobSpec(1, 0.3, (TaskSpec(1, Phase.MAP, 0, 5.0),), ()),
+    ]
+    res0 = Simulator(cluster, FIFOScheduler(cluster), jobs).run()
+    res1 = Simulator(
+        cluster, FIFOScheduler(cluster), jobs, event_epsilon=1.0
+    ).run()
+    # Arrivals coalesce into one window ending at t=0.3, so BOTH tasks
+    # start at 0.3 under eps=1 (vs 0.0/0.3 under eps=0) — and each
+    # completion is then stamped at its own start+duration instant.
+    assert res0.completion[0] == 5.0 and res0.completion[1] == 5.3
+    assert res1.completion[0] == 5.3 and res1.completion[1] == 5.3
+    assert res1.passes < res0.passes
