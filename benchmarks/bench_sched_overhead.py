@@ -41,6 +41,13 @@ epsilon-window event coalescing:
   on the bursty scaled-FB trace (near-timestamp arrival batches coalesce
   into one pass per window; eps=0 is the bit-identical legacy loop).
 
+A ``discipline_latency`` block repeats the sparse-demand measurement for
+every engine-family registry discipline (hfsp / srpt / las / psbs, see
+:mod:`repro.core.disciplines`): cached rank orders must keep every
+discipline's steady-state pass O(actionable), and ``scripts/bench_gate.py``
+fails when any recorded discipline exceeds ~2x the hfsp latency at the
+5000x1000 cell.
+
 Usage:
   PYTHONPATH=src python -m benchmarks.bench_sched_overhead \
       [--schedulers hfsp,fair,fifo] [--jobs 50,500,5000] \
@@ -187,6 +194,7 @@ def run_sparse_cell(
     demand_indexed: bool = True,
     warmup_t: float = 120.0,
     measure_events: int = 300,
+    discipline: str = "hfsp",
 ) -> dict:
     """Steady-state decision latency at one sparse-demand cell.
 
@@ -196,7 +204,13 @@ def run_sparse_cell(
     still walks O(live jobs) while the demand-indexed pass touches only
     actionable ones.  vc_backend is pinned to numpy so the cell is
     hermetic (steady-state passes run no projections either way;
-    sample_set_size=1 keeps the training warmup to two waves)."""
+    sample_set_size=1 keeps the training warmup to two waves).
+
+    ``discipline`` resolves any engine-family registry discipline
+    (hfsp / srpt / las / psbs) — the per-discipline latency block uses
+    this to sanity-bound the new ranks at trace scale."""
+    from repro.core import disciplines
+
     cluster = ClusterSpec(
         num_machines=n_machines,
         map_slots_per_machine=4,
@@ -205,7 +219,9 @@ def run_sparse_cell(
     cfg = HFSPConfig(
         sample_set_size=1, vc_backend="numpy", demand_indexed=demand_indexed
     )
-    sch = _TimedScheduler(HFSPScheduler(cluster, cfg))
+    sch = _TimedScheduler(
+        disciplines.build_scheduler(discipline, cluster, config=cfg)
+    )
     sim = Simulator(cluster, sch, sparse_demand_workload(n_jobs))
     sim.run(until=warmup_t)
     # Six consecutive steady-state windows on the same simulation; the
@@ -237,6 +253,7 @@ def run_sparse_cell(
     return {
         "jobs": n_jobs,
         "machines": n_machines,
+        "discipline": discipline,
         "demand_indexed": demand_indexed,
         "live": inner.n_live_phase(Phase.MAP),
         "actionable": len(inner._jobs_pending[Phase.MAP.value])
@@ -284,6 +301,48 @@ def run_sparse_demand(
             f"{row['legacy_ms']:.3f}ms per pass ({speed:.1f}x)",
             flush=True,
         )
+    out.emit()
+    return rows
+
+
+#: Engine-family disciplines the per-discipline latency block measures
+#: (hfsp is the reference the others are sanity-bounded against).
+DISCIPLINES = ("hfsp", "srpt", "las", "psbs")
+
+
+def run_discipline_latency(
+    cells: tuple[tuple[int, int], ...] = ((5000, 1000),),
+    disciplines: tuple[str, ...] = DISCIPLINES,
+) -> list[dict]:
+    """Steady-state decision latency per registry discipline.
+
+    Same measurement as the sparse-demand block (demand-indexed mode
+    only), once per discipline: the Discipline API's contract is that a
+    rank policy's cached order keeps steady-state passes O(actionable),
+    so no discipline should cost more than ~2x hfsp at the trace-scale
+    cell — scripts/bench_gate.py enforces that bound on the recorded
+    ``sched_disciplines_5000x1000`` latencies."""
+    out = CsvOut(
+        "discipline_latency",
+        ["discipline", "jobs", "machines", "live", "actionable", "passes",
+         "decision_latency_ms", "p99_pass_ms"],
+    )
+    rows = []
+    for nj, nm in cells:
+        for name in disciplines:
+            row = run_sparse_cell(nj, nm, discipline=name)
+            rows.append(row)
+            out.add(
+                name, nj, nm, row["live"], row["actionable"], row["passes"],
+                round(row["decision_latency_ms"], 4),
+                round(row["p99_pass_ms"], 4),
+            )
+            print(
+                f"# discipline {name} jobs={nj} machines={nm}: "
+                f"{row['decision_latency_ms']:.3f}ms per pass "
+                f"(p99 {row['p99_pass_ms']:.3f}ms)",
+                flush=True,
+            )
     out.emit()
     return rows
 
@@ -450,6 +509,8 @@ def main(argv: list[str] | None = None) -> None:
                     help="skip the water-fill kernel microbenchmark")
     ap.add_argument("--no-sparse", action="store_true",
                     help="skip the sparse-demand decision-latency block")
+    ap.add_argument("--no-disciplines", action="store_true",
+                    help="skip the per-discipline decision-latency block")
     ap.add_argument("--no-eps", action="store_true",
                     help="skip the epsilon-window coalescing sweep")
     args = ap.parse_args(argv)
@@ -491,6 +552,8 @@ def main(argv: list[str] | None = None) -> None:
         )
     if not args.no_sparse:
         run_sparse_demand()
+    if not args.no_disciplines:
+        run_discipline_latency()
     if not args.no_eps:
         run_eps_sweep(seed=args.seed)
 

@@ -107,6 +107,20 @@ def quick_sched_wall(json_path: str | None = None, seed: int = 0) -> dict:
         k: (round(v, 4) if isinstance(v, float) else v)
         for k, v in sparse.items()
     }
+    # Per-discipline decision latency at the same cell (Discipline API
+    # sanity bound: bench_gate.py fails any recorded discipline >2x the
+    # hfsp latency above).  hfsp itself is covered by the sparse block,
+    # so only the new registry disciplines re-measure here.
+    disc_rows = bench_sched_overhead.run_discipline_latency(
+        cells=((5000, 1000),), disciplines=("srpt", "las", "psbs"),
+    )
+    record["sched_disciplines_5000x1000"] = {
+        r["discipline"]: {
+            "decision_latency_ms": round(r["decision_latency_ms"], 4),
+            "p99_pass_ms": round(r["p99_pass_ms"], 4),
+        }
+        for r in disc_rows
+    }
     # Epsilon-window coalescing sweep: pass-count delta at equal event
     # progress (check.sh prints the delta from this block).
     eps_rows = bench_sched_overhead.run_eps_sweep(seed=seed)

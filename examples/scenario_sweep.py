@@ -1,11 +1,17 @@
-"""Scenario engine demo: a small estimator-error x scheduler grid.
+"""Scenario engine demo: a small estimator-error x discipline grid.
 
 Builds an ad-hoc sweep (no preset needed) over the reduced-scale FB
 trace: FIFO and FAIR as error-independent references, HFSP across three
-size-estimation error levels (Fig. 6's alpha axis), then prints the
-sojourn comparison table from the paper's evaluation — mean / median /
-p95 per cell — and the per-class means that make the "size-based wins on
-every class" claim visible.
+size-estimation error levels (Fig. 6's alpha axis), plus the Discipline
+API's SRPT / LAS / PSBS (resolved by name through the registry,
+``repro.core.disciplines``) — then prints the sojourn comparison table
+from the paper's evaluation — mean / median / p95 per cell — and the
+per-class means that make the "size-based wins on every class" claim
+visible.
+
+The full discipline x error matrix (SRPT degrading under error while the
+FSP family tolerates it) is the ``paper-estimation-error-disciplines``
+preset:  ``python -m repro.scenarios run paper-estimation-error-disciplines --quick``.
 
 Run:  PYTHONPATH=src python examples/scenario_sweep.py [--workers N]
 """
@@ -31,6 +37,10 @@ def main() -> None:
             SweepSpec.grid(**{"scheduler.policy": ("fifo", "fair")}),
             # HFSP under increasing size-estimation error (Fig. 6 axis).
             SweepSpec.grid(**{"scheduler.error_alpha": (0.0, 0.5, 1.0)}),
+            # The new registry disciplines at zero error (the full
+            # discipline x error grid is the
+            # paper-estimation-error-disciplines preset).
+            SweepSpec.grid(**{"scheduler.policy": ("srpt", "las", "psbs")}),
         ),
     )
     print(f"sweep {sweep.name}: {len(sweep.expand())} cells "

@@ -23,7 +23,17 @@ when
   ``paper-fb@quick/<policy>``) worsened more than ``--sojourn-threshold``
   (default 10%) versus the baseline — a *policy-level* regression gate:
   a scheduler edit that silently degrades scheduling quality fails here
-  even if it runs faster.
+  even if it runs faster, or
+* any registry discipline's recorded decision latency at the same
+  5000x1000 cell (``sched_disciplines_5000x1000``, Discipline API) lands
+  above ``--discipline-factor`` (default 2x) times the hfsp latency —
+  a *same-record* sanity bound, not a trajectory: a rank policy that
+  loses its cached-order O(actionable) contract on the steady-state
+  (heartbeat-only) passes fails here the first time it is recorded
+  (the same absolute noise floor applies).  The bound covers the
+  median-based steady-state estimator only: event passes legitimately
+  pay O(n log n) order rebuilds (hfsp and psbs alike), so the recorded
+  ``p99_pass_ms`` is informational, not gated.
 
 The baseline is the most recent entry that did NOT itself fail the gate —
 a regressed run is recorded for the trajectory but never becomes the
@@ -66,6 +76,32 @@ def sojourn_regressions(
     return out
 
 
+def discipline_regressions(
+    record: dict, factor: float, latency_floor_ms: float
+) -> list[str]:
+    """Registry disciplines whose recorded decision latency exceeds
+    ``factor`` x the same record's hfsp sparse-cell latency (floored by
+    the absolute noise guard).  Same-record sanity bound — needs no
+    baseline, so a brand-new discipline is gated on first recording."""
+    out = []
+    hfsp_lat = record.get("sched_sparse_5000x1000", {}).get(
+        "decision_latency_ms"
+    )
+    cells = record.get("sched_disciplines_5000x1000", {})
+    if hfsp_lat is None or not cells:
+        return out
+    limit = max(factor * hfsp_lat, latency_floor_ms)
+    for name in sorted(cells):
+        lat = cells[name]["decision_latency_ms"]
+        if lat > limit:
+            out.append(
+                f"{name}: decision latency {lat:.4f}ms > limit "
+                f"{limit:.4f}ms (= max({factor:.1f}x hfsp "
+                f"{hfsp_lat:.4f}ms, {latency_floor_ms}ms floor))"
+            )
+    return out
+
+
 def gate(
     json_path: str = "BENCH_sched.json",
     history_path: str = "BENCH_history.jsonl",
@@ -73,6 +109,7 @@ def gate(
     key: str = "hfsp",
     sojourn_threshold: float = 0.10,
     latency_floor_ms: float = 0.3,
+    discipline_factor: float = 2.0,
 ) -> int:
     record = dict(json.loads(Path(json_path).read_text()))
     history = Path(history_path)
@@ -90,13 +127,19 @@ def gate(
 
     new_wall = record["schedulers"][key]["wall_s"]
     record["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S%z")
+    # Same-record discipline sanity bound (no baseline needed).
+    disc_bad = discipline_regressions(
+        record, discipline_factor, latency_floor_ms
+    )
     if baseline is None:
-        record["gate"] = "ok"
+        record["gate"] = "ok" if not disc_bad else "regression"
         with history.open("a") as f:
             f.write(json.dumps(record, sort_keys=True) + "\n")
         print(f"bench_gate: first history entry ({key} {new_wall:.3f}s); "
-              f"nothing to compare")
-        return 0
+              f"no baseline to compare")
+        for line in disc_bad:
+            print(f"bench_gate:   discipline bound: {line}")
+        return 1 if disc_bad else 0
     old_wall = baseline["schedulers"][key]["wall_s"]
     limit = old_wall * (1.0 + threshold)
     wall_ok = new_wall <= limit
@@ -126,7 +169,9 @@ def gate(
             f"{'OK' if lat_ok else 'REGRESSION'}"
         )
     verdict = (
-        "OK" if wall_ok and lat_ok and not sojourn_bad else "REGRESSION"
+        "OK"
+        if wall_ok and lat_ok and not sojourn_bad and not disc_bad
+        else "REGRESSION"
     )
     record["gate"] = verdict.lower()
     with history.open("a") as f:
@@ -147,6 +192,14 @@ def gate(
         f"{'OK' if not sojourn_bad else 'REGRESSION'}"
     )
     for line in sojourn_bad:
+        print(f"bench_gate:   {line}")
+    n_disc = len(record.get("sched_disciplines_5000x1000", {}))
+    print(
+        f"bench_gate: discipline latencies ({n_disc} disciplines, "
+        f"{discipline_factor:.1f}x hfsp bound): "
+        f"{'OK' if not disc_bad else 'REGRESSION'}"
+    )
+    for line in disc_bad:
         print(f"bench_gate:   {line}")
     if verdict != "OK":
         if not wall_ok:
@@ -170,6 +223,13 @@ def gate(
                 "(the simulation is deterministic); investigate before "
                 "merging."
             )
+        if disc_bad:
+            print(
+                "bench_gate: a registry discipline's steady-state pass "
+                "exceeds the 2x-hfsp sanity bound — its rank policy lost "
+                "the cached-order O(actionable) contract "
+                "(docs/disciplines.md); investigate before merging."
+            )
         return 1
     return 0
 
@@ -184,11 +244,15 @@ def main() -> None:
     ap.add_argument("--latency-floor", type=float, default=0.3,
                     metavar="MS", help="absolute decision-latency limit "
                     "floor (noise guard for the sub-ms sparse cell)")
+    ap.add_argument("--discipline-factor", type=float, default=2.0,
+                    metavar="X", help="same-record bound: max allowed "
+                    "discipline latency as a multiple of hfsp's")
     args = ap.parse_args()
     sys.exit(
         gate(
             args.json, args.history, args.threshold, args.key,
             args.sojourn_threshold, args.latency_floor,
+            args.discipline_factor,
         )
     )
 

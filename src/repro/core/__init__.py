@@ -2,6 +2,8 @@
 online size estimation, a virtual PS cluster, and preemption primitives,
 plus the FIFO/FAIR baselines and the discrete-event simulator."""
 
+from repro.core import disciplines
+from repro.core.disciplines import Discipline, DisciplineRegistry
 from repro.core.estimator import (
     DistributionFitEstimator,
     FirstOrderEstimator,
@@ -24,7 +26,10 @@ from repro.core.vcluster import VirtualCluster, max_min_allocation, project_fini
 
 __all__ = [
     "ClusterSpec",
+    "Discipline",
+    "DisciplineRegistry",
     "DistributionFitEstimator",
+    "disciplines",
     "FIFOScheduler",
     "FairScheduler",
     "FirstOrderEstimator",

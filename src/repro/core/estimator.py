@@ -327,6 +327,12 @@ class TrainingModule:
         st = self._training.get((job_id, phase))
         return list(st.sample_keys) if st else []
 
+    def n_observations(self, job_id: int, phase: Phase) -> int:
+        """Sample observations recorded so far — the estimate's version
+        number (rank-stability verdicts are cached per version)."""
+        st = self._training.get((job_id, phase))
+        return len(st.observed) if st else 0
+
     def wanted_sample_tasks(self, job: JobState, phase: Phase) -> list[tuple]:
         """Sample-set tasks not yet dispatched (the slots this module asks
         the top-level scheduler for)."""

@@ -25,6 +25,7 @@ O(pending jobs x log) instead of O(live jobs x log).
 
 from __future__ import annotations
 
+from repro.core.disciplines import FairDeficitRank
 from repro.core.scheduler import Action, ClusterView, Scheduler
 from repro.core.types import Phase
 from repro.core.vcluster import discrete_allocation
@@ -32,6 +33,9 @@ from repro.core.vcluster import discrete_allocation
 
 class FairScheduler(Scheduler):
     name = "fair"
+    #: The discipline rank this scheduler assembles (registry entry
+    #: "fair"): the per-pass deficit sort uses exactly this key.
+    rank_policy = FairDeficitRank
 
     def schedule(self, view: ClusterView, now: float) -> list[Action]:
         self._begin_pass()
@@ -71,12 +75,7 @@ class FairScheduler(Scheduler):
             else:
                 cand = list(by_id)
             order = sorted(
-                cand,
-                key=lambda j: (
-                    -(targets[j] - by_id[j].n_running(phase)),
-                    by_id[j].spec.arrival_time,
-                    j,
-                ),
+                cand, key=FairDeficitRank.deficit_key(targets, by_id, phase)
             )
             for j in order:
                 if not free:

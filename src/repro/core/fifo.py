@@ -21,18 +21,23 @@ from __future__ import annotations
 
 import bisect
 
+from repro.core.disciplines import ArrivalRank
 from repro.core.scheduler import (
     Action,
     ClusterView,
     Scheduler,
     SchedulerConfig,
-    job_sort_key_fifo,
 )
 from repro.core.types import ClusterSpec, JobSpec, JobState, Phase
+
+#: The discipline rank this scheduler assembles (registry entry "fifo"):
+#: the queue below is a sorted index over exactly this key.
+job_sort_key_fifo = ArrivalRank.key_of
 
 
 class FIFOScheduler(Scheduler):
     name = "fifo"
+    rank_policy = ArrivalRank
 
     def __init__(self, cluster: ClusterSpec, config: SchedulerConfig | None = None):
         cfg = config or SchedulerConfig()

@@ -64,10 +64,19 @@ Invariants the fast paths rely on (all cross-checked every pass under
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Callable
 
+from repro.core.disciplines import (
+    AgingPolicy,
+    PreemptionPolicy,
+    RankPolicy,
+    VirtualClusterAging,
+    VirtualFinishRank,
+    WallClockAging,
+)
 from repro.core.estimator import (
     FirstOrderEstimator,
     TaskTimeEstimator,
@@ -127,12 +136,57 @@ class HFSPConfig(SchedulerConfig):
 
 
 class HFSPScheduler(Scheduler):
+    """The size-based scheduling *engine*, assembled into a discipline.
+
+    With the default policies (``rank=VirtualFinishRank()``, plain
+    preemption, virtual-cluster aging) this IS the paper's HFSP,
+    bit-identical to the pre-Discipline-API scheduler.  The seams —
+    ``rank`` (job order), ``preemption_policy`` (primitive + hysteresis
+    veto), ``aging`` (priority movement over time) — let the registry
+    (:mod:`repro.core.disciplines`) assemble SRPT, LAS, PSBS, or any
+    third-party discipline out of the same engine: demand-indexed
+    passes, the Training module, delay scheduling, and the preemption
+    machinery are shared; only the policies differ.  The rank policy's
+    capability flags gate the subsystems: ``needs_estimates`` runs the
+    Training module, ``uses_vcluster`` maintains and ages the virtual
+    cluster.
+    """
+
     name = "hfsp"
 
-    def __init__(self, cluster: ClusterSpec, config: HFSPConfig | None = None):
+    def __init__(
+        self,
+        cluster: ClusterSpec,
+        config: HFSPConfig | None = None,
+        *,
+        rank: RankPolicy | None = None,
+        preemption_policy: PreemptionPolicy | None = None,
+        aging: AgingPolicy | None = None,
+        name: str | None = None,
+    ):
         cfg = config or HFSPConfig()
+        if (
+            preemption_policy is not None
+            and preemption_policy.mode is not cfg.preemption
+        ):
+            # The policy's mode is authoritative: the engine's preemption
+            # machinery keeps reading config.preemption, so the two must
+            # agree — on a private copy, never by mutating the caller's
+            # config object (which may be shared across schedulers).
+            cfg = dataclasses.replace(cfg, preemption=preemption_policy.mode)
         super().__init__(cluster, cfg)
         self.config: HFSPConfig = cfg
+        self.rank = rank or VirtualFinishRank()
+        self.preemption_policy = preemption_policy or PreemptionPolicy(
+            mode=cfg.preemption
+        )
+        self.aging = aging or (
+            VirtualClusterAging()
+            if self.rank.uses_vcluster
+            else WallClockAging()
+        )
+        if name is not None:
+            self.name = name
         self.training = TrainingModule(
             sample_set_size=cfg.sample_set_size,
             delta=cfg.delta,
@@ -150,6 +204,27 @@ class HFSPScheduler(Scheduler):
         }
         self._clock = 0.0
         self._eager_enabled = True  # hysteresis state (Sect. 3.3)
+        # (job_id, phase.value) pairs whose phase has been started
+        # (training begun / virtual job added) — the run-once guard for
+        # the REDUCE slow-start unlock, policy-independent.
+        self._phase_started: set[tuple[int, str]] = set()
+        # Largest rank-stability position spread observed by the
+        # preemption-hysteresis hook (whatif_diagnostics).
+        self._max_rank_spread = 0
+        # Monotone rank-state version: bumped (via _rank_dirty) whenever
+        # the schedule order may change.  Together with the base
+        # scheduler's _run_epoch it keys the cross-pass caches below —
+        # between passes with equal epochs, the actor list and the
+        # per-machine victim maxima are provably identical, so a
+        # steady-state (heartbeat-only) pass reuses them in O(1).
+        self._rank_epoch = 0
+        # phase.value -> (epoch key, sorted actor list).
+        self._actor_cache: dict[str, tuple[tuple, list[int]]] = {}
+        # (machine, phase.value) -> max schedule position among the
+        # machine's RUNNING tasks (-1 = none ranked); lazily filled, and
+        # dropped wholesale when either epoch moves.
+        self._mvmax: dict[tuple[int, str], int] = {}
+        self._mvmax_epoch: tuple[int, int] | None = None
         # Pass-scoped victim-order cache (reset per phase pass).
         self._pass_victims: list[int] | None = None
         if cfg.error_alpha > 0:
@@ -166,8 +241,7 @@ class HFSPScheduler(Scheduler):
     def _advance(self, now: float) -> None:
         dt = now - self._clock
         if dt > 0:
-            for vc in self.vc.values():
-                vc.age(dt)
+            self.aging.advance(self, dt, now)
             self._clock = now
 
     # ------------------------------------------------------------------
@@ -189,18 +263,20 @@ class HFSPScheduler(Scheduler):
 
     def _start_phase(self, js: JobState, phase: Phase) -> None:
         tasks = js.spec.tasks(phase)
-        est = self.training.start_phase(js, phase)
-        js.est_size[phase] = est
-        if tasks:
-            self.vc[phase].add_job(
-                js.spec.job_id, est, len(tasks), weight=js.spec.weight
-            )
+        self._phase_started.add((js.spec.job_id, phase.value))
+        if self.rank.needs_estimates:
+            est = self.training.start_phase(js, phase)
+            js.est_size[phase] = est
+            if tasks and self.rank.uses_vcluster:
+                self.vc[phase].add_job(
+                    js.spec.job_id, est, len(tasks), weight=js.spec.weight
+                )
+        self._rank_dirty(phase)
 
     def _maybe_unlock_reduce(self, js: JobState) -> None:
         if (
             js.spec.reduce_tasks
-            and js.spec.job_id not in self.vc[Phase.REDUCE]
-            and Phase.REDUCE not in js.est_size
+            and (js.spec.job_id, Phase.REDUCE.value) not in self._phase_started
             and js.reduce_unlocked()
         ):
             self._start_phase(js, Phase.REDUCE)
@@ -213,20 +289,26 @@ class HFSPScheduler(Scheduler):
             return
         phase = Phase(key[1])
         att = js.tasks[key]
-        new_est = self.training.observe_completion(
-            js, phase, key, att.spec.duration
-        )
-        vc = self.vc[phase]
-        if new_est is not None:
-            new_est = self._perturb(new_est)
-            js.est_size[phase] = new_est
-            vc.set_size(job_id, new_est)
-        if js.n_unfinished(phase) == 0:
-            vc.remove_job(job_id)
+        if self.rank.needs_estimates:
+            new_est = self.training.observe_completion(
+                js, phase, key, att.spec.duration
+            )
+            if new_est is not None:
+                new_est = self._perturb(new_est)
+                js.est_size[phase] = new_est
+                if self.rank.uses_vcluster:
+                    self.vc[phase].set_size(job_id, new_est)
+        if js.n_unfinished(phase) == 0 and self.rank.uses_vcluster:
+            self.vc[phase].remove_job(job_id)
         # NOTE: real task completions do NOT shrink the virtual cap — the
         # virtual cluster is a pure PS simulation (see vcluster docstring).
         if phase is Phase.MAP:
             self._maybe_unlock_reduce(js)
+        # Attained service / estimates / membership changed for THIS
+        # phase only (a MAP completion cannot move REDUCE rank keys; a
+        # freshly-unlocked REDUCE phase was invalidated by _start_phase
+        # above).
+        self._rank_dirty(phase)
 
     def on_task_progress(
         self, job_id: int, key: tuple, fraction: float, elapsed: float, now: float
@@ -237,18 +319,29 @@ class HFSPScheduler(Scheduler):
         if js is None:
             return
         phase = Phase(key[1])
+        if not self.rank.needs_estimates:
+            return
         new_est = self.training.observe_progress(js, phase, key, fraction, elapsed)
         if new_est is not None:
             new_est = self._perturb(new_est)
             js.est_size[phase] = new_est
-            self.vc[phase].set_size(job_id, new_est)
+            if self.rank.uses_vcluster:
+                self.vc[phase].set_size(job_id, new_est)
+            self._rank_dirty(phase)
 
     def on_job_complete(self, job_id: int, now: float) -> None:
         self._advance(now)
         super().on_job_complete(job_id, now)
         for vc in self.vc.values():
             vc.remove_job(job_id)
+        for pv in (Phase.MAP.value, Phase.REDUCE.value):
+            self._phase_started.discard((job_id, pv))
         self._skip_counts.pop(job_id, None)
+        # Let the policies evict their per-job state (hysteresis verdict
+        # cache, PSBS bump counts) so long runs stay O(live jobs).
+        self.preemption_policy.forget(job_id)
+        self.aging.forget(job_id)
+        self._rank_dirty()
 
     # -- run-state hooks: keep the Training module's demand indexes in
     # lockstep with sample-task state changes (O(sample set) per event).
@@ -267,14 +360,17 @@ class HFSPScheduler(Scheduler):
     def on_task_resumed(self, att, slot) -> None:
         super().on_task_resumed(att, slot)
         self._training_sync(att)
+        self._rank_dirty(att.spec.phase)
 
     def on_task_suspended(self, att) -> None:
         super().on_task_suspended(att)
         self._training_sync(att)
+        self._rank_dirty(att.spec.phase)
 
     def on_task_killed(self, att) -> None:
         super().on_task_killed(att)
         self._training_sync(att)
+        self._rank_dirty(att.spec.phase)
 
     def _paranoid_check(self, view: ClusterView, phase: Phase) -> None:
         super()._paranoid_check(view, phase)
@@ -292,7 +388,8 @@ class HFSPScheduler(Scheduler):
         self._advance(now)
         self._begin_pass()
         self._update_hysteresis(view)
-        self._warm_order_caches(now)
+        if self.rank.uses_vcluster:
+            self._warm_order_caches(now)
         actions: list[Action] = []
         for phase in (Phase.MAP, Phase.REDUCE):
             actions.extend(self._phase_schedule(view, phase, now))
@@ -391,6 +488,35 @@ class HFSPScheduler(Scheduler):
         fins = vc.projected_finish_batch(scenarios, now, as_sizes=True)
         return [vc._order_from_fin(fin).index(job_id) for fin in fins]
 
+    def note_rank_stability(self, spread: int, vetoed: bool) -> None:
+        """Record one preemption-hysteresis consultation (called by
+        :class:`repro.core.disciplines.StabilityHysteresis`); surfaces
+        in :meth:`whatif_diagnostics` and the scenario report layer."""
+        self.stats.rank_stability_checks += 1
+        if vetoed:
+            self.stats.rank_stability_vetoes += 1
+        if spread > self._max_rank_spread:
+            self._max_rank_spread = spread
+
+    def whatif_diagnostics(self) -> dict:
+        """Preemption-hysteresis / what-if diagnostics for the scenario
+        report layer (one dict per cell; all JSON-serializable).  Counts
+        cover the whole run: how often the preemption policy priced a
+        batched what-if projection (``rank_stability``), how often it
+        vetoed a preemption, the largest rank spread it saw, and the
+        PSBS late-job bumps.  These counters appear ONLY here — the
+        report's ``stats`` block keeps its pre-Discipline-API fields
+        (the suspended-bytes EAGER->WAIT fallbacks live there)."""
+        return {
+            "discipline": self.name,
+            "rank_policy": self.rank.name,
+            "aging_policy": self.aging.name,
+            "rank_stability_checks": self.stats.rank_stability_checks,
+            "rank_stability_vetoes": self.stats.rank_stability_vetoes,
+            "max_rank_spread": self._max_rank_spread,
+            "late_job_bumps": self.stats.late_job_bumps,
+        }
+
     def _update_hysteresis(self, view: ClusterView) -> None:
         """EAGER -> WAIT fallback on suspended-state pressure (Sect. 3.3)."""
         total = view.total_suspended_bytes()
@@ -422,15 +548,16 @@ class HFSPScheduler(Scheduler):
         self._maybe_resync_indexes(view, phase)
         if self.config.paranoid_indexes:
             self._paranoid_check(view, phase)
+        # Pass-scoped priority adjustments (PSBS late-job re-injection)
+        # run before the rank order is read so they shape this pass.
+        self.aging.on_pass(self, phase, now)
         free = list(view.free_slots(phase))
-        # Jobs ranked by projected PS finish time (Sect. 3.1).  Jobs whose
-        # phase is live but unknown to the virtual cluster (zero tasks)
-        # cannot appear here; jobs with infinite estimates sort last.
-        # Positions come from the order cache — valid across passes until
-        # the next structural event — so a steady-state pass pays O(1)
-        # here, not O(live jobs).
-        order = self.vc[phase].schedule_order(now)
-        pos_of = self.vc[phase].schedule_pos(now)
+        # Jobs in the discipline's rank order (HFSP: ascending projected
+        # PS finish time, Sect. 3.1; SRPT: estimated remaining; LAS:
+        # attained service).  Positions come from the policy's order
+        # cache — valid across passes until the next structural event —
+        # so a steady-state pass pays O(1) here, not O(live jobs).
+        order, pos_of = self.rank.order_and_pos(self, phase, now)
         # Pass-scoped victim-order cache (running jobs by ascending
         # position), built lazily on the first preemption walk.
         self._pass_victims = None
@@ -478,29 +605,15 @@ class HFSPScheduler(Scheduler):
             return actions
         rmax = -2  # lazy: highest schedule position of any running job
         if demand_indexed:
-            # Actor eligibility: known to the virtual cluster and, when
-            # no slot is free, positioned before some running job — a job
-            # can then act only by preempting (or displacing into) a
-            # *later-ordered* running victim, so actors past every
-            # running job are provable no-ops (their victim walks break
-            # immediately and count nothing, in every preemption mode).
             lim = None
             if not free:
                 rmax = self._max_running_pos(phase, order)
                 if rmax < 0:
                     return actions
                 lim = rmax
-            cand = [
-                j for j in pend
-                if j in pos_of and (lim is None or pos_of[j] < lim)
-            ]
-            cand.extend(
-                j for j in susp
-                if j not in pend
-                and j in pos_of
-                and (lim is None or pos_of[j] < lim)
+            actors = self._actors(
+                phase, pend, susp, pos_of, lim, eager_ok, bool(free)
             )
-            actors = sorted(cand, key=pos_of.__getitem__)
         else:
             # Legacy walk: every phase-live job in schedule order.
             actors = [j for j in order if j in live_scan]
@@ -529,7 +642,14 @@ class HFSPScheduler(Scheduler):
             # Preempt later jobs for remaining unmet demand — but never on
             # behalf of a job that just declined slots to wait for locality.
             unmet = self._unclaimed_pending(js, phase)
-            if unmet > 0 and not free and not delayed:
+            if (
+                unmet > 0 and not free and not delayed
+                # Hysteresis veto (checked last — it may price a batched
+                # what-if projection): a discipline's preemption policy
+                # can decline to preempt on behalf of this job this pass
+                # (PSBS: while the job's rank is still unstable).
+                and self.preemption_policy.may_preempt(self, js, phase, now)
+            ):
                 acts, freed = self._preempt_for(
                     js, pos, phase, unmet, pos_of, eager_ok, protected,
                 )
@@ -561,6 +681,111 @@ class HFSPScheduler(Scheduler):
             if order[i] in running:
                 return i
         return -1
+
+    def _rank_dirty(self, phase: Phase | None = None) -> None:
+        """The schedule order may have changed: bump the rank epoch
+        (invalidating the cross-pass actor/mvmax caches) and forward the
+        invalidation to the rank policy's own order cache."""
+        self._rank_epoch += 1
+        self.rank.invalidate(phase)
+
+    def _actors(
+        self,
+        phase: Phase,
+        pend: dict[int, None],
+        susp: dict[int, None],
+        pos_of: dict[int, int],
+        lim: int | None,
+        eager_ok: bool,
+        have_free: bool,
+    ) -> list[int]:
+        """The pass's actor list (jobs that can emit an action), sorted
+        by ascending rank position — cached across passes until the
+        run/rank epochs move.
+
+        Actor eligibility: known to the rank order and, when no slot is
+        free, positioned before some running job (``lim``) — a job can
+        then act only by preempting (or displacing into) a
+        *later-ordered* running victim, so actors past every running
+        job are provable no-ops (their victim walks break immediately
+        and count nothing, in every preemption mode).
+
+        Suspended-only actors get one further provable prune when no
+        slot is free: resume is machine-local (Sect. 3.3), so such an
+        actor can act only by suspending a later-ordered victim on a
+        machine that holds its suspended state.  If no such machine has
+        a running task positioned after the actor (``mvmax``), every
+        candidate inside ``_resume_with_preemption`` fails the position
+        test and the walk emits nothing — and without eager preemption
+        the resume path cannot act at all without free slots.  Claims
+        and the protected set only shrink eligibility further, so the
+        position-only filter is exact for exclusion.  (Ranks like LAS
+        can hold thousands of tied suspended jobs below ``lim``
+        indefinitely; without this prune every heartbeat pass re-walked
+        them all.)
+
+        The epoch key makes the cache sound: the list is a pure function
+        of the demand/run indexes (run epoch), the rank order (rank
+        epoch), free-slot availability, and the hysteresis state — a
+        pass that emitted actions bumps the run epoch through the
+        executor hooks, so only genuinely idle passes hit the cache.
+        The legacy walk (``demand_indexed=False``) never uses it; the
+        equivalence suite pins the filter's neutrality."""
+        pv = phase.value
+        key = (self._run_epoch, self._rank_epoch, have_free, eager_ok)
+        hit = self._actor_cache.get(pv)
+        if hit is not None and hit[0] == key:
+            return hit[1]
+        cand = [
+            j for j in pend
+            if j in pos_of and (lim is None or pos_of[j] < lim)
+        ]
+        if have_free:
+            cand.extend(
+                j for j in susp
+                if j not in pend
+                and j in pos_of
+                and (lim is None or pos_of[j] < lim)
+            )
+        elif eager_ok:
+            jobs = self.jobs
+            for j in susp:
+                if j in pend or j not in pos_of:
+                    continue
+                p = pos_of[j]
+                if lim is not None and p >= lim:
+                    continue
+                for m in jobs[j].suspended_by_machine(phase):
+                    if self._machine_max_victim_pos(m, pv, pos_of) > p:
+                        cand.append(j)
+                        break
+        actors = sorted(cand, key=pos_of.__getitem__)
+        self._actor_cache[pv] = (key, actors)
+        return actors
+
+    def _machine_max_victim_pos(
+        self, m: int, pv: str, pos_of: dict[int, int]
+    ) -> int:
+        """Highest schedule position among RUNNING tasks on machine
+        ``m`` (-1 if none ranked) — the machine-local analogue of
+        ``_max_running_pos``, cached across passes on the same epoch
+        key as the actor list."""
+        epoch = (self._run_epoch, self._rank_epoch)
+        if self._mvmax_epoch != epoch:
+            self._mvmax.clear()
+            self._mvmax_epoch = epoch
+        mk = (m, pv)
+        v = self._mvmax.get(mk)
+        if v is None:
+            v = -1
+            bucket = self._run_by_machine.get(mk)
+            if bucket:
+                for key in bucket:
+                    p = pos_of.get(key[0])
+                    if p is not None and p > v:
+                        v = p
+            self._mvmax[mk] = v
+        return v
 
     def _victim_order(self, phase: Phase, pos_of: dict[int, int]) -> list[int]:
         """Jobs with RUNNING tasks by ascending schedule position, cached
@@ -876,13 +1101,18 @@ class HFSPScheduler(Scheduler):
             slot_of = self._slot_of
             n_later = 0
             budget = js.n_suspended(phase)
-            # Iterate only jobs that actually have running tasks (the
-            # _jobs_running index) — O(running jobs), not O(live jobs);
-            # only later-ordered ones can be victims.
-            for vjid in self._jobs_running[pv]:
-                vp = pos_of.get(vjid)
-                if vp is None or vp <= pos:
-                    continue
+            # Walk the pass-cached victim order (running jobs ascending
+            # by position) from the back: the later-ordered victims are
+            # exactly its suffix, so the scan is O(min(later victims,
+            # budget)) instead of O(running jobs) — same resulting set
+            # (or the same None bail once later-running tasks outnumber
+            # the suspended budget), since membership does not depend on
+            # iteration order.
+            vorder = self._victim_order(phase, pos_of)
+            for i in range(len(vorder) - 1, -1, -1):
+                vjid = vorder[i]
+                if pos_of[vjid] <= pos:
+                    break  # ascending order: no later-ordered jobs left
                 bucket = self._run_by_job.get((vjid, pv))
                 if not bucket:
                     continue

@@ -217,6 +217,27 @@ class Scheduler(abc.ABC):
         # Jobs whose REDUCE phase has been registered with the demand
         # indexes (slow-start crossed) — registration happens exactly once.
         self._reduce_open: set[int] = set()
+        # -- attained-service counters (Discipline API) ---------------------
+        # Per-(job, phase) *useful* attained service: progress that still
+        # counts toward completion, materialized at executor events
+        # (complete / suspend / resume / kill).  Running tasks' progress
+        # accrues continuously in simulation time but is only folded in
+        # when an event materializes it, so the counters are
+        # event-constant — the contract that lets rank policies (SRPT
+        # remaining, LAS attained; repro.core.disciplines) cache their
+        # job order between events.  KILL discards the task's counted
+        # progress (the work must be redone).
+        self._attained: dict[tuple[int, str], float] = {}
+        # Per-task absolute progress already folded into _attained.
+        self._svc_counted: dict[tuple, float] = {}
+        # Monotone version of the run/demand state: bumped on every
+        # index mutation (task started / resumed / suspended / killed /
+        # completed, arrivals, REDUCE unlocks, job completion).  Between
+        # two passes with equal epochs, the indexes — and therefore any
+        # pure function of them — are provably unchanged; the engine's
+        # cross-pass actor/feasibility caches key on it (together with
+        # the rank epoch; see repro.core.hfsp).
+        self._run_epoch = 0
 
     def _begin_pass(self) -> None:
         self._claimed.clear()
@@ -240,6 +261,7 @@ class Scheduler(abc.ABC):
 
     # -- events (executor -> scheduler) -------------------------------------
     def on_job_arrival(self, spec: JobSpec, now: float) -> JobState:
+        self._run_epoch += 1
         js = JobState(spec=spec)
         self.jobs[spec.job_id] = js
         self._live[spec.job_id] = js
@@ -258,6 +280,7 @@ class Scheduler(abc.ABC):
         jid = js.spec.job_id
         if jid in self._reduce_open:
             return
+        self._run_epoch += 1
         self._reduce_open.add(jid)
         rv = Phase.REDUCE.value
         if js.n_unfinished(Phase.REDUCE):
@@ -277,6 +300,11 @@ class Scheduler(abc.ABC):
             return
         pv = key[1]
         phase = Phase(pv)
+        # Attained service: fold in the task's final segment (its full
+        # duration minus whatever earlier suspends already counted).
+        delta = js.tasks[key].spec.duration - self._svc_counted.pop(key, 0.0)
+        jk = (job_id, pv)
+        self._attained[jk] = self._attained.get(jk, 0.0) + delta
         if js.n_unfinished(phase) == 0:
             # Phase drained: drop the job from this phase's demand indexes.
             self._n_live_phase[pv] -= 1
@@ -291,12 +319,14 @@ class Scheduler(abc.ABC):
         pass
 
     def on_job_complete(self, job_id: int, now: float) -> None:
+        self._run_epoch += 1
         self._live.pop(job_id, None)
         # Prune the (empty-by-now) per-job run buckets and demand entries.
         for pv in (Phase.MAP.value, Phase.REDUCE.value):
             self._run_by_job.pop((job_id, pv), None)
             self._jobs_pending[pv].pop(job_id, None)
             self._jobs_suspended[pv].pop(job_id, None)
+            self._attained.pop((job_id, pv), None)
         self._reduce_open.discard(job_id)
 
     def on_tick(self, now: float) -> None:
@@ -316,6 +346,9 @@ class Scheduler(abc.ABC):
 
     def on_task_resumed(self, att: TaskAttempt, slot: SlotKey) -> None:
         self._index_add(att, slot)
+        # RESUME may have rolled progress back (DMA swap-in cost): re-sync
+        # the counted progress so attained service reflects the rollback.
+        self._svc_mark(att)
         js = self.jobs.get(att.spec.job_id)
         if js is not None and not js.n_suspended(att.spec.phase):
             self._jobs_suspended[att.spec.phase.value].pop(
@@ -324,14 +357,37 @@ class Scheduler(abc.ABC):
 
     def on_task_suspended(self, att: TaskAttempt) -> None:
         self._index_remove(att.spec.key)
+        self._svc_mark(att)  # progress was just materialized by the executor
         self._jobs_suspended[att.spec.phase.value][att.spec.job_id] = None
 
     def on_task_killed(self, att: TaskAttempt) -> None:
         self._index_remove(att.spec.key)
+        self._svc_mark(att)  # progress reset to 0: discards counted service
         # KILL re-queues the task: the job has pending demand again.
         self._jobs_pending[att.spec.phase.value][att.spec.job_id] = None
 
+    def _svc_mark(self, att: TaskAttempt) -> None:
+        """Fold the task's materialized ``progress`` into the attained-
+        service counter (O(1); exact because executors materialize
+        progress before calling the hooks)."""
+        key = att.spec.key
+        prev = self._svc_counted.get(key, 0.0)
+        if att.progress != prev:
+            jk = (att.spec.job_id, att.spec.phase.value)
+            self._attained[jk] = (
+                self._attained.get(jk, 0.0) + att.progress - prev
+            )
+            self._svc_counted[key] = att.progress
+
+    def attained_service(self, job_id: int, phase: Phase) -> float:
+        """Useful attained service of a job's phase (seconds of task
+        progress that still count toward completion), as of the last
+        executor event.  O(1); the rank-key input for the SRPT and LAS
+        disciplines (:mod:`repro.core.disciplines`)."""
+        return self._attained.get((job_id, phase.value), 0.0)
+
     def _index_add(self, att: TaskAttempt, slot: SlotKey) -> None:
+        self._run_epoch += 1
         key = att.spec.key
         pv = slot.phase.value
         self._slot_of[key] = slot
@@ -350,6 +406,7 @@ class Scheduler(abc.ABC):
         self._n_running_idx[pv] += 1
 
     def _index_remove(self, key: tuple) -> None:
+        self._run_epoch += 1
         slot = self._slot_of.pop(key, None)
         if slot is None:
             return

@@ -379,3 +379,9 @@ class SchedulerStats:
     delay_sched_waits: int = 0
     training_tasks: int = 0
     hysteresis_fallbacks: int = 0
+    # Discipline-API diagnostics: rank-stability preemption hysteresis
+    # (repro.core.disciplines.StabilityHysteresis) and PSBS late-job
+    # virtual re-injections (PSBSLateAging).
+    rank_stability_checks: int = 0
+    rank_stability_vetoes: int = 0
+    late_job_bumps: int = 0

@@ -315,6 +315,17 @@ class VirtualCluster:
         # Lazy aging: deferred per-event dt increments, replayed in order
         # by _materialize() (see module docstring).
         self._pending_dts: list[float] = []
+        # -- virtually-done tracking (PSBS late-job aging) ------------------
+        # Jobs whose virtual remaining hit 0 while still members ("late"
+        # jobs: virtually finished, really unfinished).  Maintained by the
+        # aging replay and the size setters; read by
+        # ``virtually_done()``, which gates materialization on a
+        # conservative horizon (min remaining/cap over live jobs = the
+        # earliest any job could virtually finish) so steady-state reads
+        # are O(1).  ``_pending_total`` mirrors sum(_pending_dts) in O(1).
+        self._vdone: set[int] = set()
+        self._pending_total = 0.0
+        self._vdone_horizon: float | None = None
 
     @property
     def jobs(self) -> dict[int, _VJob]:
@@ -351,6 +362,7 @@ class VirtualCluster:
             task_time=max(tt, 1e-9),
             owner=self,
         )
+        self._sync_vdone(job_id)
         self._maybe_auto_upgrade()
         self._invalidate_alloc()
         self._invalidate_order()
@@ -373,6 +385,7 @@ class VirtualCluster:
     def remove_job(self, job_id: int) -> None:
         self._materialize()
         if self._jobs.pop(job_id, None) is not None:
+            self._vdone.discard(job_id)
             self._invalidate_alloc()
             self._invalidate_order()
 
@@ -384,6 +397,7 @@ class VirtualCluster:
         if job_id in self._jobs:
             self._materialize()
             self._jobs[job_id].remaining = remaining
+            self._sync_vdone(job_id)
             # The virtual parallelism (_ecap) is derived from `remaining`,
             # so a stale discrete allocation must not survive this update:
             # a lazily-timed rebuild would otherwise make the *timing* of
@@ -400,6 +414,7 @@ class VirtualCluster:
             self._materialize()  # bring `done` up to date first
             v = self._jobs[job_id]
             v.remaining = max(0.0, size - v.done)
+            self._sync_vdone(job_id)
             if v.cap and math.isfinite(size):
                 v.task_time = max(size / v.cap, 1e-9)
             self._invalidate_alloc()
@@ -417,6 +432,44 @@ class VirtualCluster:
         self._materialize()
         return self._jobs[job_id].remaining if job_id in self._jobs else 0.0
 
+    def _sync_vdone(self, job_id: int) -> None:
+        v = self._jobs[job_id]
+        if not math.isinf(v.remaining) and v.remaining <= 0.0:
+            self._vdone.add(job_id)
+        else:
+            self._vdone.discard(job_id)
+        self._vdone_horizon = None
+
+    def virtually_done(self) -> list[int]:
+        """Job ids whose *virtual* remaining work is exhausted while they
+        are still members (real tasks unfinished) — PSBS's "late" jobs
+        (:class:`repro.core.disciplines.PSBSLateAging`).
+
+        Horizon-gated: queued lazy aging is only replayed when its
+        cumulative dt could actually have finished a job (``min
+        remaining/cap`` over live jobs — cap bounds any job's virtual
+        service rate, so this is a conservative earliest-completion
+        bound).  Steady-state calls with an unreachable horizon are O(1)
+        and leave the lazy-aging queue untouched."""
+        if self._pending_dts and (
+            self._vdone_horizon is None
+            or self._pending_total >= self._vdone_horizon - 1e-9
+        ):
+            self._materialize()
+        if self._vdone_horizon is None:
+            h = math.inf
+            for v in self._jobs.values():
+                if (
+                    not math.isinf(v.remaining)
+                    and v.remaining > 0.0
+                    and v.cap > 0
+                ):
+                    d = v.remaining / v.cap
+                    if d < h:
+                        h = d
+            self._vdone_horizon = h
+        return sorted(self._vdone)
+
     # -- aging (Sect. 3.1, "Job aging") --------------------------------------
     def age(self, dt: float) -> None:
         """Distribute ``dt`` of progress to every allocated virtual task.
@@ -426,6 +479,7 @@ class VirtualCluster:
         if dt <= 0 or not self._jobs:
             return
         self._pending_dts.append(dt)
+        self._pending_total += dt
 
     def _materialize(self) -> None:
         """Replay deferred aging increments, one event-dt at a time.
@@ -436,8 +490,12 @@ class VirtualCluster:
         if not self._pending_dts:
             return
         pending, self._pending_dts = self._pending_dts, []
+        self._pending_total = 0.0
         for dt in pending:
             self._age_step(dt)
+        # Remaining work shrank: the virtual-completion horizon is stale
+        # (recomputed lazily by the next virtually_done() query).
+        self._vdone_horizon = None
 
     def _age_step(self, dt: float) -> None:
         cap_changed = False
@@ -446,6 +504,8 @@ class VirtualCluster:
             vjob.done += a * dt
             if not math.isinf(vjob.remaining):
                 vjob.remaining = max(0.0, vjob.remaining - a * dt)
+                if vjob.remaining <= 0.0:
+                    self._vdone.add(vjob.job_id)
             if vjob._ecap() != before:
                 cap_changed = True
         if cap_changed:

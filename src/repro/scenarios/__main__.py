@@ -165,7 +165,19 @@ def main(argv: list[str] | None = None) -> int:
 
     p = sub.add_parser("replay", help="replay a JSONL trace")
     p.add_argument("trace")
-    p.add_argument("--policy", default="hfsp", choices=("fifo", "fair", "hfsp"))
+    # Any registered discipline replays.  No argparse `choices`: policy
+    # names validate lazily against the discipline registry at build
+    # time (repro.scenarios.runner.build_scheduler), whose KeyError
+    # lists what IS registered — snapshotting the registry here would
+    # reject disciplines registered after import.
+    from repro.core import disciplines
+
+    p.add_argument(
+        "--policy", default="hfsp",
+        help=f"scheduling discipline (registered: "
+             f"{', '.join(disciplines.names())}, or any name registered "
+             f"from user code)",
+    )
     p.add_argument("--machines", type=int, default=100)
 
     args = ap.parse_args(argv)

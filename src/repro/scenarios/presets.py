@@ -119,6 +119,32 @@ def _paper_estimation_error() -> SweepSpec:
     )
 
 
+@register_preset("paper-estimation-error-disciplines")
+def _paper_estimation_error_disciplines() -> SweepSpec:
+    """Beyond-paper: the headline comparison of "Revisiting Size-Based
+    Scheduling with Estimated Job Sizes" / PSBS (Dell'Amico et al.) —
+    discipline x estimation-error on the MAP-only FB variant.  SRPT
+    ranks by raw estimated remaining size and degrades as error grows
+    (underestimated jobs clamp to zero remaining and camp at the head of
+    the order); the FSP family (hfsp, psbs) absorbs error through the
+    virtual cluster's relative progression; LAS never looks at sizes and
+    is the error-independent reference (single cell, second grid).  All
+    four resolve through the discipline registry — add a registered
+    discipline to the grid and it sweeps identically."""
+    base = paper_fb_base().override(**{"workload.map_only": True})
+    return SweepSpec(
+        name="paper-estimation-error-disciplines",
+        base=base,
+        grids=(
+            SweepSpec.grid(**{
+                "scheduler.policy": ("hfsp", "srpt", "psbs"),
+                "scheduler.error_alpha": (0.0, 0.5, 1.0),
+            }),
+            SweepSpec.grid(**{"scheduler.policy": ("las",)}),
+        ),
+    )
+
+
 @register_preset("paper-fb-eps")
 def _paper_fb_eps() -> SweepSpec:
     """Beyond-paper: the Fig. 3 comparison under epsilon-window event

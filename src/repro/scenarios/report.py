@@ -54,6 +54,14 @@ def scenario_report(
         for cls, vals in sorted(per_class_sojourns(res, class_of).items())
     }
     st = scheduler.stats
+    # Preemption-hysteresis / what-if diagnostics (engine-family
+    # schedulers expose whatif_diagnostics(); fifo/fair have none): how
+    # often the discipline's preemption policy priced a batched what-if
+    # projection (rank_stability), how often it vetoed, PSBS late-job
+    # re-injections — the per-cell observability the ROADMAP's
+    # "scenario-level what-if reports" item asked for.
+    diag = getattr(scheduler, "whatif_diagnostics", None)
+    whatif = diag() if callable(diag) else None
     return {
         "spec": spec.to_dict(),
         "wall_s": round(wall_s, 3),
@@ -77,6 +85,7 @@ def scenario_report(
         "events": res.events,
         "scheduler_passes": res.passes,
         "passes_per_event": round(res.passes / res.events, 4) if res.events else 0.0,
+        "whatif": whatif,
         "stats": {
             "suspensions": st.suspensions,
             "resumes": st.resumes,

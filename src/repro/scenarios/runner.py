@@ -16,14 +16,10 @@ import time
 
 from repro.core import (
     ClusterSpec,
-    FairScheduler,
-    FIFOScheduler,
-    HFSPConfig,
-    HFSPScheduler,
-    Preemption,
     SimConfig,
     SimResult,
     Simulator,
+    disciplines,
 )
 from repro.core.types import JobSpec
 from repro.scenarios.report import scenario_report
@@ -84,21 +80,24 @@ def build_cluster(spec: ScenarioSpec) -> ClusterSpec:
 
 
 def build_scheduler(spec: ScenarioSpec, cluster: ClusterSpec):
+    """Resolve the spec's policy name against the discipline registry
+    (:mod:`repro.core.disciplines`) and build the scheduler.
+
+    This is where policy names are validated: an unknown name raises
+    ``KeyError`` listing the registered disciplines — specs themselves
+    are plain data and accept any name, so disciplines registered from
+    user code sweep like the built-ins.
+    """
     s = spec.scheduler
-    if s.policy == "fifo":
-        return FIFOScheduler(cluster)
-    if s.policy == "fair":
-        return FairScheduler(cluster)
-    return HFSPScheduler(
+    return disciplines.build_scheduler(
+        s.policy,
         cluster,
-        HFSPConfig(
-            preemption=Preemption(s.preemption),
-            sample_set_size=s.sample_set_size,
-            delta=s.delta,
-            error_alpha=s.error_alpha,
-            error_seed=s.error_seed,
-            vc_backend=s.vc_backend,
-        ),
+        preemption=s.preemption,
+        sample_set_size=s.sample_set_size,
+        delta=s.delta,
+        error_alpha=s.error_alpha,
+        error_seed=s.error_seed,
+        vc_backend=s.vc_backend,
     )
 
 

@@ -32,7 +32,14 @@ from dataclasses import dataclass, field, fields, is_dataclass, replace
 SPEC_VERSION = 1
 
 WORKLOAD_KINDS = ("fb", "fb_scaled", "ml", "trace")
-POLICIES = ("fifo", "fair", "hfsp")
+#: The built-in scheduling disciplines (informational; the authoritative
+#: set is the discipline registry, ``repro.core.disciplines.names()``,
+#: which third-party code extends at runtime).  Policy names are NOT
+#: validated at spec construction — a spec is plain data and must be
+#: able to name a discipline that is registered later; resolution (and
+#: the unknown-name error listing what IS registered) happens in
+#: :func:`repro.scenarios.runner.build_scheduler`.
+POLICIES = ("fifo", "fair", "hfsp", "srpt", "las", "psbs")
 PREEMPTIONS = ("eager", "wait", "kill")
 
 
@@ -84,10 +91,21 @@ class ClusterAxis:
 
 @dataclass(frozen=True)
 class SchedulerAxis:
-    """Policy + preemption + estimation-error model + vcluster backend."""
+    """Policy + preemption + estimation-error model + vcluster backend.
+
+    ``policy`` names a discipline in the registry
+    (:mod:`repro.core.disciplines`).  It is validated lazily, at
+    scheduler-build time — not here — so specs and sweeps can be
+    constructed over disciplines registered from user code (or not yet
+    imported); an unknown name fails at resolve time with the list of
+    registered disciplines.
+    """
 
     policy: str = "hfsp"
-    preemption: str = "eager"        # hfsp only; fifo/fair ignore it
+    #: Preemption primitive for the engine-family disciplines (hfsp,
+    #: srpt, las, psbs, and custom engine assemblies); fifo/fair never
+    #: preempt and ignore it.
+    preemption: str = "eager"
     #: Fig. 6 error model: finalized estimates perturbed uniformly in
     #: [s*(1-alpha), s*(1+alpha)].
     error_alpha: float = 0.0
@@ -99,10 +117,6 @@ class SchedulerAxis:
     vc_backend: str | None = None
 
     def __post_init__(self) -> None:
-        if self.policy not in POLICIES:
-            raise ValueError(
-                f"unknown policy {self.policy!r}; expected {POLICIES}"
-            )
         if self.preemption not in PREEMPTIONS:
             raise ValueError(
                 f"unknown preemption {self.preemption!r}; expected {PREEMPTIONS}"

@@ -22,11 +22,16 @@ from repro.core import (
     Preemption,
     SchedulerConfig,
     Simulator,
+    disciplines,
 )
 from repro.workload import fb_cluster, fb_dataset
 
 #: Scheduler variants the golden-trace suites cover.
 TRACE_SCHEDULERS = ("fifo", "fair", "hfsp", "hfsp-kill")
+
+#: The registry disciplines added by the Discipline API, covered by the
+#: same golden-trace contract (tests/test_disciplines.py).
+DISCIPLINE_SCHEDULERS = ("srpt", "las", "psbs")
 
 #: Seeds of the golden traces.
 GOLDEN_SEEDS = (0, 1, 2)
@@ -43,6 +48,7 @@ def run_trace(
     num_machines: int = 20,
     demand_indexed: bool = True,
     event_epsilon: float = 0.0,
+    via_registry: bool = False,
 ) -> dict:
     """One FB-trace simulation; returns the comparable outcome summary.
 
@@ -53,23 +59,26 @@ def run_trace(
     the legacy full-walk scheduling passes (must be bit-identical);
     ``event_epsilon`` sets the simulator's coalescing window (0 = legacy
     pass-per-event loop, also bit-identical).
+
+    ``name`` may also be a registry discipline ("srpt" / "las" / "psbs"
+    / anything registered); those always build through the registry.
+    ``via_registry=True`` forces the fifo/fair/hfsp variants through
+    ``repro.core.disciplines.build_scheduler`` too — the routing the
+    scenario runner uses — which must be bit-identical to direct
+    construction.
     """
     cluster = fb_cluster(num_machines=num_machines)
     jobs, _ = fb_dataset(seed=seed, num_jobs=num_jobs)
-    if name == "fifo":
-        sch = FIFOScheduler(
-            cluster,
-            SchedulerConfig(
-                paranoid_indexes=paranoid, demand_indexed=demand_indexed
-            ),
+    if name in ("fifo", "fair"):
+        cfg = SchedulerConfig(
+            paranoid_indexes=paranoid, demand_indexed=demand_indexed
         )
-    elif name == "fair":
-        sch = FairScheduler(
-            cluster,
-            SchedulerConfig(
-                paranoid_indexes=paranoid, demand_indexed=demand_indexed
-            ),
-        )
+        if via_registry:
+            sch = disciplines.build_scheduler(name, cluster, config=cfg)
+        elif name == "fifo":
+            sch = FIFOScheduler(cluster, cfg)
+        else:
+            sch = FairScheduler(cluster, cfg)
     else:
         cfg = HFSPConfig(
             paranoid_indexes=paranoid,
@@ -80,7 +89,12 @@ def run_trace(
             cfg.vc_auto_threshold = vc_auto_threshold
         if name == "hfsp-kill":
             cfg.preemption = Preemption.KILL
-        sch = HFSPScheduler(cluster, cfg)
+        if name in ("hfsp", "hfsp-kill") and not via_registry:
+            sch = HFSPScheduler(cluster, cfg)
+        else:
+            sch = disciplines.build_scheduler(
+                "hfsp" if name == "hfsp-kill" else name, cluster, config=cfg
+            )
     res = Simulator(cluster, sch, jobs, event_epsilon=event_epsilon).run()
     st = res.stats
     return {

@@ -1,0 +1,447 @@
+"""Discipline API tests (repro.core.disciplines).
+
+Four contracts:
+
+* **registry** — register / override / unknown-name errors, and the
+  scenario layer's lazy policy validation (specs accept any name;
+  resolution errors list what is registered);
+* **rank policies in isolation** — SRPT / LAS / arrival keys and the
+  KeyedRankPolicy order cache on hand-built job states;
+* **routing equivalence** — fifo/fair/hfsp/hfsp-kill built through
+  ``disciplines.build_scheduler`` are bit-identical to direct
+  construction on the golden traces (the acceptance bar for re-routing
+  the legacy schedulers through the registry);
+* **new-discipline goldens** — srpt/las/psbs on the golden traces:
+  bit-identical across vcluster backends (numpy / jax / auto),
+  demand-indexed vs legacy-walk passes, eps=0 vs the default loop, and
+  reproducible at eps=0.5.
+"""
+
+import pytest
+
+from conformance import (
+    DISCIPLINE_SCHEDULERS,
+    GOLDEN_SEEDS,
+    TRACE_SCHEDULERS,
+    assert_traces_equal,
+    run_trace,
+)
+from repro.core import disciplines
+from repro.core.disciplines import (
+    ArrivalRank,
+    Discipline,
+    DisciplineRegistry,
+    LASRank,
+    SRPTRank,
+    StabilityHysteresis,
+)
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.types import ClusterSpec, JobSpec, Phase, TaskSpec
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+def _noop_discipline(name: str) -> Discipline:
+    return Discipline(name=name, build=lambda cluster, **kw: None)
+
+
+def test_registry_register_get_names():
+    reg = DisciplineRegistry()
+    d = reg.register("x", _noop_discipline("x"))
+    assert reg.get("x") is d
+    assert reg.names() == ["x"]
+
+
+def test_registry_duplicate_requires_override():
+    reg = DisciplineRegistry()
+    reg.register("x", _noop_discipline("x"))
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("x", _noop_discipline("x2"))
+    d2 = reg.register("x", _noop_discipline("x2"), override=True)
+    assert reg.get("x") is d2
+
+
+def test_registry_unknown_name_lists_registered():
+    reg = DisciplineRegistry()
+    reg.register("aaa", _noop_discipline("aaa"))
+    reg.register("bbb", _noop_discipline("bbb"))
+    with pytest.raises(KeyError, match="aaa, bbb"):
+        reg.get("nope")
+
+
+def test_builtin_disciplines_registered():
+    assert {"fifo", "fair", "hfsp", "srpt", "las", "psbs"} <= set(
+        disciplines.names()
+    )
+
+
+def test_legacy_schedulers_declare_their_rank_assembly():
+    """The fifo/fair classes are assemblies of the discipline ranks:
+    the class attribute is the linkage (and the queue key IS the
+    ArrivalRank key), matching what the registry metadata reports."""
+    from repro.core.disciplines import FairDeficitRank
+    from repro.core.fair import FairScheduler
+    from repro.core.fifo import FIFOScheduler, job_sort_key_fifo
+
+    assert FIFOScheduler.rank_policy is ArrivalRank
+    assert job_sort_key_fifo is ArrivalRank.key_of
+    assert FairScheduler.rank_policy is FairDeficitRank
+    assert disciplines.get("fifo").rank == ArrivalRank.name
+    assert disciplines.get("fair").rank == FairDeficitRank.name
+
+
+def test_scheduler_axis_accepts_unregistered_policy_lazily():
+    """Satellite: specs are plain data — an unknown policy constructs
+    (and round-trips) fine; the error comes at resolve time and names
+    the registered disciplines."""
+    from repro.scenarios.runner import build_scheduler
+    from repro.scenarios.spec import ScenarioSpec, SchedulerAxis
+
+    spec = ScenarioSpec(scheduler=SchedulerAxis(policy="not-registered"))
+    assert ScenarioSpec.from_dict(spec.to_dict()) == spec  # still just data
+    with pytest.raises(KeyError, match="hfsp"):
+        build_scheduler(spec, ClusterSpec(num_machines=2))
+
+
+def test_user_registered_discipline_resolves_through_scenario_runner():
+    """Third-party registration is enough to make a policy sweepable."""
+    from repro.scenarios.runner import simulate
+    from repro.scenarios.spec import (
+        ClusterAxis,
+        ScenarioSpec,
+        SchedulerAxis,
+        WorkloadAxis,
+    )
+
+    name = "test-preemptive-fifo"
+    disciplines.register(
+        name,
+        disciplines.engine_discipline(
+            name, ArrivalRank, description="test-only"
+        ),
+        override=True,
+    )
+    try:
+        spec = ScenarioSpec(
+            name="custom",
+            workload=WorkloadAxis(kind="fb", seed=0, num_jobs=8),
+            cluster=ClusterAxis(num_machines=4),
+            scheduler=SchedulerAxis(policy=name),
+        )
+        res, _, sch = simulate(spec)
+        assert sch.name == name
+        assert sch.rank.name == ArrivalRank.name
+        assert len(res.completion) == 8
+    finally:
+        del disciplines.REGISTRY._disciplines[name]
+
+
+# ---------------------------------------------------------------------------
+# Rank policies in isolation
+# ---------------------------------------------------------------------------
+class _StubEngine(Scheduler):
+    """Minimal concrete Scheduler: real demand indexes + attained
+    counters, no decision logic."""
+
+    def schedule(self, view, now):  # pragma: no cover - never scheduled
+        return []
+
+
+def _job(jid: int, n_tasks: int = 2, dur: float = 10.0, arrival: float = 0.0,
+         weight: float = 1.0) -> JobSpec:
+    return JobSpec(
+        job_id=jid,
+        arrival_time=arrival,
+        map_tasks=tuple(
+            TaskSpec(jid, Phase.MAP, i, dur) for i in range(n_tasks)
+        ),
+        reduce_tasks=(),
+        weight=weight,
+    )
+
+
+def _stub_with_jobs(specs) -> _StubEngine:
+    eng = _StubEngine(ClusterSpec(num_machines=2), SchedulerConfig())
+    for spec in specs:
+        eng.on_job_arrival(spec, spec.arrival_time)
+    return eng
+
+
+def test_srpt_rank_orders_by_estimated_remaining():
+    eng = _stub_with_jobs([_job(1), _job(2), _job(3), _job(4)])
+    rank = SRPTRank()
+    eng.jobs[1].est_size[Phase.MAP] = 100.0
+    eng.jobs[2].est_size[Phase.MAP] = 50.0
+    eng.jobs[3].est_size[Phase.MAP] = 100.0
+    # job 4 has no estimate -> infinite remaining -> sorts last
+    eng._attained[(3, Phase.MAP.value)] = 70.0  # remaining 30: best
+    order, pos = rank.order_and_pos(eng, Phase.MAP, 0.0)
+    assert order == [3, 2, 1, 4]
+    assert pos == {3: 0, 2: 1, 1: 2, 4: 3}
+
+
+def test_srpt_rank_clamps_underestimates_to_zero():
+    # attained > estimate (underestimated job): remaining clamps to 0 and
+    # ties break by arrival -> the SRPT error-fragility the preset shows.
+    eng = _stub_with_jobs([_job(1, arrival=5.0), _job(2, arrival=1.0)])
+    eng.jobs[1].est_size[Phase.MAP] = 10.0
+    eng.jobs[2].est_size[Phase.MAP] = 10.0
+    eng._attained[(1, Phase.MAP.value)] = 99.0
+    eng._attained[(2, Phase.MAP.value)] = 50.0
+    order, _ = SRPTRank().order_and_pos(eng, Phase.MAP, 0.0)
+    assert order == [2, 1]  # both clamp to 0; earlier arrival first
+
+
+def test_las_rank_orders_by_attained_service():
+    eng = _stub_with_jobs([_job(1), _job(2), _job(3)])
+    eng._attained[(1, Phase.MAP.value)] = 40.0
+    eng._attained[(2, Phase.MAP.value)] = 5.0
+    order, _ = LASRank().order_and_pos(eng, Phase.MAP, 0.0)
+    assert order == [3, 2, 1]  # untouched job (0 attained) first
+
+
+def test_arrival_rank_matches_fifo_key():
+    eng = _stub_with_jobs([
+        _job(1, arrival=2.0), _job(2, arrival=1.0),
+        _job(3, arrival=5.0, weight=2.0),  # higher weight wins
+    ])
+    order, _ = ArrivalRank().order_and_pos(eng, Phase.MAP, 0.0)
+    assert order == [3, 2, 1]
+
+
+def test_keyed_rank_cache_and_invalidate():
+    eng = _stub_with_jobs([_job(1), _job(2)])
+    rank = LASRank()
+    order1, _ = rank.order_and_pos(eng, Phase.MAP, 0.0)
+    assert order1 == [1, 2]
+    eng._attained[(1, Phase.MAP.value)] = 100.0
+    # Cached: the stale order survives until the engine invalidates.
+    assert rank.order_and_pos(eng, Phase.MAP, 0.0)[0] == [1, 2]
+    rank.invalidate(Phase.MAP)
+    assert rank.order_and_pos(eng, Phase.MAP, 0.0)[0] == [2, 1]
+    # invalidate() with no phase drops both phases.
+    rank.invalidate()
+    assert rank._order[Phase.MAP.value] is None
+
+
+def test_attained_service_counters_follow_task_lifecycle():
+    from repro.core.types import SlotKey, TaskState
+
+    eng = _stub_with_jobs([_job(1, n_tasks=2, dur=10.0)])
+    js = eng.jobs[1]
+    atts = js.pending(Phase.MAP)
+    slot = SlotKey(0, Phase.MAP, 0)
+    # start -> no attained yet (progress not materialized)
+    js.transition(atts[0], TaskState.RUNNING)
+    eng.on_task_started(atts[0], slot)
+    assert eng.attained_service(1, Phase.MAP) == 0.0
+    # suspend at progress 4 -> materializes 4s
+    atts[0].progress = 4.0
+    js.transition(atts[0], TaskState.SUSPENDED)
+    eng.on_task_suspended(atts[0])
+    assert eng.attained_service(1, Phase.MAP) == 4.0
+    # resume with DMA rollback to 3 -> counter follows down
+    atts[0].progress = 3.0
+    js.transition(atts[0], TaskState.RUNNING)
+    eng.on_task_resumed(atts[0], slot)
+    assert eng.attained_service(1, Phase.MAP) == 3.0
+    # completion folds in the full duration exactly once
+    atts[0].progress = 10.0
+    js.transition(atts[0], TaskState.DONE)
+    eng.on_task_complete(1, atts[0].spec.key, 10.0)
+    assert eng.attained_service(1, Phase.MAP) == 10.0
+    # kill discards the second task's counted service
+    js.transition(atts[1], TaskState.RUNNING)
+    eng.on_task_started(atts[1], slot)
+    atts[1].progress = 6.0
+    js.transition(atts[1], TaskState.SUSPENDED)
+    eng.on_task_suspended(atts[1])
+    assert eng.attained_service(1, Phase.MAP) == 16.0
+    atts[1].progress = 2.0
+    js.transition(atts[1], TaskState.RUNNING)
+    eng.on_task_resumed(atts[1], slot)
+    atts[1].progress = 0.0
+    js.transition(atts[1], TaskState.PENDING)
+    eng.on_task_killed(atts[1])
+    assert eng.attained_service(1, Phase.MAP) == 10.0
+
+
+# ---------------------------------------------------------------------------
+# PSBS parts: late-job detection + stability hysteresis
+# ---------------------------------------------------------------------------
+def test_vcluster_virtually_done_and_horizon_gating():
+    from repro.core.vcluster import VirtualCluster
+
+    vc = VirtualCluster(phase=Phase.MAP, slots=4, backend="numpy")
+    vc.add_job(1, est_size=100.0, num_tasks=2)   # earliest possible: 50s
+    vc.add_job(2, est_size=1000.0, num_tasks=2)
+    assert vc.virtually_done() == []
+    vc.age(10.0)
+    # 10 < 50: the horizon proves no job can have finished -> the lazy
+    # aging queue must be untouched (O(1) steady-state reads).
+    assert vc.virtually_done() == []
+    assert vc._pending_dts, "horizon gate should not have materialized"
+    vc.age(100.0)  # cumulative 110 > 50: job 1 (2 slots of 4) is done
+    assert vc.virtually_done() == [1]
+    # re-injecting virtual work (the PSBS bump) clears the late flag
+    vc.set_remaining(1, 25.0)
+    assert vc.virtually_done() == []
+    vc.remove_job(1)
+    assert 1 not in vc
+
+
+def test_psbs_late_aging_bumps_late_jobs():
+    """An underestimated job goes virtually-done long before its real
+    tasks finish; PSBS re-injects virtual work and counts the bump."""
+    from repro.core import Simulator
+    from repro.workload import fb_cluster, fb_dataset
+
+    cluster = fb_cluster(num_machines=20)
+    jobs, _ = fb_dataset(seed=0, num_jobs=30)
+    sch = disciplines.build_scheduler("psbs", cluster)
+    out = Simulator(cluster, sch, jobs).run()
+    assert out.stats.late_job_bumps > 0
+    assert out.stats.rank_stability_checks > 0
+    diag = sch.whatif_diagnostics()
+    assert diag["discipline"] == "psbs"
+    assert diag["late_job_bumps"] == out.stats.late_job_bumps
+
+
+def test_stability_hysteresis_vetoes_and_caches():
+    class _FakeTraining:
+        def is_training(self, jid, phase):
+            return True
+
+        def n_observations(self, jid, phase):
+            return 2
+
+    class _FakeEngine:
+        training = _FakeTraining()
+
+        def __init__(self, positions):
+            self.positions = positions
+            self.calls = 0
+            self.noted = []
+
+        def rank_stability(self, jid, phase, now):
+            self.calls += 1
+            return self.positions
+
+        def note_rank_stability(self, spread, vetoed):
+            self.noted.append((spread, vetoed))
+
+    class _JS:
+        class spec:
+            job_id = 7
+
+    pol = StabilityHysteresis(max_spread=0)
+    eng = _FakeEngine([0, 3, 1])
+    assert pol.may_preempt(eng, _JS, Phase.MAP, 0.0) is False
+    assert eng.noted[-1] == (3, True)
+    # Cached per (job, phase, observation count): no second projection.
+    assert pol.may_preempt(eng, _JS, Phase.MAP, 1.0) is False
+    assert eng.calls == 1
+    # A settled job passes (fresh policy: the verdict cache is keyed by
+    # (job, phase, observation count), which the previous engine shares).
+    eng2 = _FakeEngine([2, 2, 2])
+    assert StabilityHysteresis(max_spread=0).may_preempt(
+        eng2, _JS, Phase.MAP, 0.0
+    ) is True
+    assert eng2.noted[-1] == (0, False)
+
+
+def test_stability_hysteresis_spread_reachable():
+    """rank_stability must be able to report a nonzero spread (else the
+    hysteresis hook could never fire): an in-training job with wildly
+    different sample observations straddles settled jobs."""
+    from repro.core import HFSPConfig, HFSPScheduler
+
+    cluster = ClusterSpec(num_machines=2, map_slots_per_machine=2,
+                          reduce_slots_per_machine=1)
+    sch = HFSPScheduler(cluster, HFSPConfig(sample_set_size=3))
+    for jid, dur in ((1, 10.0), (2, 11.0), (3, 12.0)):
+        sch.on_job_arrival(_job(jid, n_tasks=4, dur=dur), 0.0)
+        sch.vc[Phase.MAP].set_size(jid, 4 * dur)
+    js = sch.on_job_arrival(_job(4, n_tasks=10, dur=10.0), 0.0)
+    st = sch.training._training[(4, Phase.MAP)]
+    st.observed[st.sample_keys[0]] = 1.0
+    st.observed[st.sample_keys[1]] = 30.0
+    pos = sch.rank_stability(4, Phase.MAP, 0.0)
+    assert pos and max(pos) - min(pos) > 0
+
+
+# ---------------------------------------------------------------------------
+# Routing equivalence: legacy schedulers through the registry
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", GOLDEN_SEEDS)
+@pytest.mark.parametrize("name", TRACE_SCHEDULERS)
+def test_registry_routing_bit_identical(name, seed):
+    direct = run_trace(name, seed)
+    routed = run_trace(name, seed, via_registry=True)
+    assert_traces_equal(direct, routed)
+
+
+@pytest.mark.parametrize("name", ("hfsp", "hfsp-kill"))
+def test_registry_routing_bit_identical_jax_backend(name):
+    pytest.importorskip("jax")
+    direct = run_trace(name, 0, vc_backend="jax")
+    routed = run_trace(name, 0, vc_backend="jax", via_registry=True)
+    assert_traces_equal(direct, routed)
+
+
+# ---------------------------------------------------------------------------
+# New-discipline golden traces
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", GOLDEN_SEEDS)
+@pytest.mark.parametrize("name", DISCIPLINE_SCHEDULERS)
+def test_discipline_backend_conformance(name, seed):
+    """numpy / jax / auto vcluster backends are bit-identical for the
+    new disciplines (psbs exercises the kernels on every pass; srpt/las
+    pin that the knob is inert where it should be)."""
+    pytest.importorskip("jax")
+    ref = run_trace(name, seed, vc_backend="numpy")
+    assert_traces_equal(ref, run_trace(name, seed, vc_backend="jax"))
+    assert_traces_equal(
+        ref, run_trace(name, seed, vc_backend="auto", vc_auto_threshold=5)
+    )
+
+
+@pytest.mark.parametrize("name", DISCIPLINE_SCHEDULERS)
+def test_discipline_completes_and_orders_distinctly(name):
+    res = run_trace(name, 0)
+    assert len(res["completion"]) == 30
+
+
+def test_disciplines_produce_distinct_schedules():
+    """srpt / las / psbs are genuinely different disciplines on the
+    golden trace — not three names for one schedule."""
+    runs = {n: run_trace(n, 0) for n in DISCIPLINE_SCHEDULERS}
+    comps = {n: tuple(sorted(r["completion"].items())) for n, r in runs.items()}
+    assert comps["srpt"] != comps["las"]
+    assert comps["srpt"] != comps["psbs"]
+    assert comps["las"] != comps["psbs"]
+
+
+@pytest.mark.parametrize("name", DISCIPLINE_SCHEDULERS)
+def test_discipline_demand_index_equivalence(name):
+    """The demand-indexed pass and the legacy full walk agree for the
+    new disciplines too (the KeyedRankPolicy order is shared state, like
+    the vcluster caches; paranoid mode cross-checks the indexes)."""
+    indexed = run_trace(name, 0, paranoid=True)
+    legacy = run_trace(name, 0, demand_indexed=False)
+    assert_traces_equal(indexed, legacy)
+
+
+@pytest.mark.parametrize("name", DISCIPLINE_SCHEDULERS)
+def test_discipline_eps_zero_bit_identical(name):
+    ref = run_trace(name, 0)
+    assert_traces_equal(ref, run_trace(name, 0, event_epsilon=0.0))
+
+
+@pytest.mark.parametrize("name", DISCIPLINE_SCHEDULERS)
+def test_discipline_eps_half_reproducible(name):
+    a = run_trace(name, 0, event_epsilon=0.5)
+    b = run_trace(name, 0, event_epsilon=0.5)
+    assert_traces_equal(a, b)
+    assert len(a["completion"]) == 30
