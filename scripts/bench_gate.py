@@ -66,8 +66,10 @@ def sojourn_regressions(
     out = []
     new_s, old_s = record.get("scenarios", {}), baseline.get("scenarios", {})
     for cell in sorted(set(new_s) & set(old_s)):
-        new_m = new_s[cell]["mean_sojourn_s"]
-        old_m = old_s[cell]["mean_sojourn_s"]
+        new_m = new_s[cell].get("mean_sojourn_s")
+        old_m = old_s[cell].get("mean_sojourn_s")
+        if new_m is None or old_m is None:
+            continue  # cell predates (or dropped) the gated key
         if old_m > 0 and new_m > old_m * (1.0 + threshold):
             out.append(
                 f"{cell}: mean sojourn {old_m:.1f}s -> {new_m:.1f}s "
@@ -92,7 +94,9 @@ def discipline_regressions(
         return out
     limit = max(factor * hfsp_lat, latency_floor_ms)
     for name in sorted(cells):
-        lat = cells[name]["decision_latency_ms"]
+        lat = cells[name].get("decision_latency_ms")
+        if lat is None:
+            continue
         if lat > limit:
             out.append(
                 f"{name}: decision latency {lat:.4f}ms > limit "
@@ -111,21 +115,58 @@ def gate(
     latency_floor_ms: float = 0.3,
     discipline_factor: float = 2.0,
 ) -> int:
-    record = dict(json.loads(Path(json_path).read_text()))
+    # Every malformed-input path below is a one-line diagnosis, never a
+    # traceback: the gate runs at the tail of scripts/check.sh and its
+    # output is the thing a contributor reads.
+    bench_path = Path(json_path)
+    if not bench_path.exists():
+        print(
+            f"bench_gate: no benchmark record at {json_path} — run "
+            f"'python benchmarks/run.py --quick --json {json_path}' first; "
+            f"nothing to gate"
+        )
+        return 0
+    try:
+        record = dict(json.loads(bench_path.read_text()))
+    except ValueError:
+        print(
+            f"bench_gate: {json_path} is not valid JSON — re-run the quick "
+            f"bench to regenerate it"
+        )
+        return 2
+    new_wall = (record.get("schedulers") or {}).get(key, {}).get("wall_s")
+    if new_wall is None:
+        print(
+            f"bench_gate: {json_path} lacks the gated key "
+            f"schedulers[{key!r}].wall_s — re-run the quick bench "
+            f"(or pass the right --key)"
+        )
+        return 2
     history = Path(history_path)
     # Baseline = newest entry that did not itself fail the gate (entries
-    # from before the gate field existed count as passing).
+    # from before the gate field existed count as passing; unparseable
+    # lines — e.g. a torn tail from an interrupted run — are skipped).
     baseline = None
     if history.exists():
         for ln in reversed(history.read_text().splitlines()):
             if not ln.strip():
                 continue
-            entry = json.loads(ln)
+            try:
+                entry = json.loads(ln)
+            except ValueError:
+                continue
             if entry.get("gate", "ok") == "ok":
                 baseline = entry
                 break
-
-    new_wall = record["schedulers"][key]["wall_s"]
+    if baseline is not None and (
+        (baseline.get("schedulers") or {}).get(key, {}).get("wall_s") is None
+    ):
+        print(
+            f"bench_gate: baseline history entry lacks "
+            f"schedulers[{key!r}].wall_s (older record format) — treating "
+            f"this run as the first entry, nothing to compare"
+        )
+        baseline = None
     record["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S%z")
     # Same-record discipline sanity bound (no baseline needed).
     disc_bad = discipline_regressions(
@@ -136,7 +177,7 @@ def gate(
         with history.open("a") as f:
             f.write(json.dumps(record, sort_keys=True) + "\n")
         print(f"bench_gate: first history entry ({key} {new_wall:.3f}s); "
-              f"no baseline to compare")
+              f"nothing to compare — fresh clones pass trivially")
         for line in disc_bad:
             print(f"bench_gate:   discipline bound: {line}")
         return 1 if disc_bad else 0

@@ -1,12 +1,16 @@
 #!/usr/bin/env bash
-# One-command gate: tier-1 tests + the quick scheduler benchmark (which
-# includes the paper-fb@quick scenario smoke sweep, the sparse-demand
-# 5000x1000 decision-latency cell, and the epsilon-window coalescing
-# sweep) + the perf-trajectory gate (appends BENCH_sched.json to
-# BENCH_history.jsonl and fails on a >25% hfsp wall-clock regression OR a
-# >25% sparse-demand decision-latency regression (0.3ms noise floor) OR a >10% per-scenario
-# mean-sojourn regression — policy-level quality, not just speed — vs the
-# previous entry).
+# One-command gate: tier-1 tests (including the fault-injection
+# determinism/robustness suite, tests/test_faults.py) + the quick
+# scheduler benchmark (which includes the paper-fb@quick scenario smoke
+# sweep, the sparse-demand 5000x1000 decision-latency cell, and the
+# epsilon-window coalescing sweep) + the perf-trajectory gate (appends
+# BENCH_sched.json to BENCH_history.jsonl and fails on a >25% hfsp
+# wall-clock regression OR a >25% sparse-demand decision-latency
+# regression (0.3ms noise floor) OR a >10% per-scenario mean-sojourn
+# regression — policy-level quality, not just speed — vs the previous
+# entry) + a paper-faults@quick goodput/sojourn summary (scheduling
+# under machine/task failures; informational, the properties themselves
+# are pinned by tests/test_faults.py).
 #
 #   scripts/check.sh            # tests + quick bench + trajectory gate
 #   scripts/check.sh --no-bench # tests only
@@ -45,4 +49,7 @@ for eps in sorted(sweep, key=float):
         f"{delta}"
     )
 PY
+  echo
+  echo "== paper-faults@quick goodput/sojourn =="
+  python scripts/faults_summary.py --workers 4
 fi

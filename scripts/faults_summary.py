@@ -1,0 +1,51 @@
+#!/usr/bin/env python
+"""Print the paper-faults@quick goodput/sojourn summary.
+
+Runs the reduced-scale fault-robustness matrix (scheduling under machine
+crashes, task failures, stragglers, and estimation-sample loss — see
+docs/faults.md) and prints one line per cell: mean sojourn next to
+goodput, retries, and speculation wins.  Exits non-zero if any cell lost
+a job — fault recovery must always complete the workload.
+
+scripts/check.sh runs this after the perf-trajectory gate; the
+determinism and robustness properties themselves are pinned by
+tests/test_faults.py, this output is the human-readable trend line.
+
+Usage:
+  PYTHONPATH=src python scripts/faults_summary.py [--workers N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=4)
+    args = ap.parse_args()
+
+    from repro.scenarios import get_preset, quick_sweep, run_sweep
+
+    sweep = quick_sweep(get_preset("paper-faults"))
+    results = run_sweep(sweep, workers=args.workers)
+    lost = 0
+    for cid in sorted(results, key=lambda c: results[c]["mean_sojourn_s"]):
+        r = results[cid]
+        f = r["faults"]
+        lost += r["jobs_lost"]
+        print(
+            f"{cid}: mean_sojourn {r['mean_sojourn_s']:7.1f}s  "
+            f"goodput {f['goodput']:.3f}  retries {f['retries']:4d}  "
+            f"spec_wins {f['speculative_wins']:3d}"
+        )
+    print(f"jobs lost across {len(results)} faulted cells: {lost}")
+    if lost:
+        print("faults_summary: fault recovery lost jobs", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,7 @@ from repro.core.estimator import (
     TrainingModule,
 )
 from repro.core.fair import FairScheduler
+from repro.core.faults import FaultInjector, FaultModel, FirstFinisherWins
 from repro.core.fifo import FIFOScheduler
 from repro.core.hfsp import HFSPConfig, HFSPScheduler
 from repro.core.scheduler import Scheduler, SchedulerConfig
@@ -32,6 +33,9 @@ __all__ = [
     "disciplines",
     "FIFOScheduler",
     "FairScheduler",
+    "FaultInjector",
+    "FaultModel",
+    "FirstFinisherWins",
     "FirstOrderEstimator",
     "HFSPConfig",
     "HFSPScheduler",

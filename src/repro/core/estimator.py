@@ -369,6 +369,41 @@ class TrainingModule:
                 sizes.append(float(sum(self.estimator.fit_vector(sub, n_tasks))))
         return sizes
 
+    def lose_sample(self, job: JobState, phase: Phase, key: tuple) -> None:
+        """Fault layer: a completed sample task's duration observation was
+        dropped in flight (repro.core.faults).  Re-request coherently:
+        swap the lost key for a replacement task that can still run (so a
+        real observation eventually arrives); when no replacement exists
+        the sample set shrinks and :meth:`_maybe_finalize`'s threshold
+        shrinks with it.  No-op if the key was already observed (e.g. an
+        earlier sigma = Delta/p progress estimate survives the loss)."""
+        st = self._training.get((job.spec.job_id, phase))
+        if st is None or st.done or key not in st.sample_keys:
+            return
+        if key in st.observed:
+            return
+        idx = st.sample_keys.index(key)
+        in_set = set(st.sample_keys)
+        replacement = None
+        for t in job.spec.tasks(phase):
+            if t.key in in_set:
+                continue
+            if job.tasks[t.key].state is not TaskState.DONE:
+                replacement = t.key
+                break
+        if replacement is not None:
+            st.sample_keys[idx] = replacement
+        else:
+            del st.sample_keys[idx]
+            if not st.sample_keys and not st.observed:
+                # Every observation lost and nothing left to sample:
+                # training can never complete — close it out; the phase
+                # keeps its initial xi-weighted estimate.
+                st.done = True
+                job.in_training[phase] = False
+                self._active.pop((job.spec.job_id, phase), None)
+        self.sync_job(job, phase)
+
     # -- observations ----------------------------------------------------------
     def observe_completion(self, job: JobState, phase: Phase, key: tuple,
                            duration: float) -> float | None:
@@ -415,6 +450,11 @@ class TrainingModule:
         stops consuming Training-module slots) at ``sample_set_size``
         observations as in the paper."""
         n_needed = min(self.sample_set_size, len(job.spec.tasks(phase)))
+        # Sample loss without a replacement shrinks the achievable set
+        # (every observed key is a sample key, so len(sample_keys) bounds
+        # the observations that can ever arrive).  Zero-fault runs always
+        # have len(sample_keys) == n_needed — the min is inert there.
+        n_needed = min(n_needed, len(st.sample_keys))
         if not st.observed:
             return None
         if len(st.observed) >= n_needed:

@@ -68,6 +68,15 @@ class FIFOScheduler(Scheduler):
 
     def on_task_killed(self, att) -> None:
         super().on_task_killed(att)  # re-adds the job's pending demand
+        self._requeue(att)
+
+    def on_task_readmitted(self, att) -> None:
+        # Fault layer: a FAILED task re-entered PENDING after its
+        # re-admission backoff — same re-enqueue contract as KILL.
+        super().on_task_readmitted(att)
+        self._requeue(att)
+
+    def _requeue(self, att) -> None:
         pv = att.spec.phase.value
         jid = att.spec.job_id
         if jid not in self._queued[pv]:

@@ -227,6 +227,10 @@ class HFSPScheduler(Scheduler):
         self._mvmax_epoch: tuple[int, int] | None = None
         # Pass-scoped victim-order cache (reset per phase pass).
         self._pass_victims: list[int] | None = None
+        # Machines currently out of the cluster (crashed or blacklisted
+        # by the fault layer); the virtual clusters' capacity is
+        # recomputed from this set so crash/recover stays idempotent.
+        self._down_machines: set[int] = set()
         if cfg.error_alpha > 0:
             import numpy as _np
 
@@ -370,6 +374,55 @@ class HFSPScheduler(Scheduler):
     def on_task_killed(self, att) -> None:
         super().on_task_killed(att)
         self._training_sync(att)
+        self._rank_dirty(att.spec.phase)
+
+    # -- fault hooks (see repro.core.faults / docs/faults.md) ------------
+    def on_task_failed(self, att) -> None:
+        super().on_task_failed(att)
+        self._training_sync(att)  # a FAILED sample is neither wanted nor running
+        self._rank_dirty(att.spec.phase)
+
+    def on_task_readmitted(self, att) -> None:
+        super().on_task_readmitted(att)
+        self._training_sync(att)  # a re-admitted sample is dispatchable again
+        self._rank_dirty(att.spec.phase)
+
+    def on_machine_crashed(self, machine: int) -> None:
+        super().on_machine_crashed(machine)
+        self._down_machines.add(machine)
+        self._resize_vclusters()
+
+    def on_machine_recovered(self, machine: int) -> None:
+        super().on_machine_recovered(machine)
+        self._down_machines.discard(machine)
+        self._resize_vclusters()
+
+    def _resize_vclusters(self) -> None:
+        """Recompute virtual capacity from the down-machine set (an
+        idempotent recompute, so crash-while-blacklisted sequences cannot
+        double-count a machine)."""
+        if self.rank.uses_vcluster:
+            n_down = len(self._down_machines)
+            for phase, per in (
+                (Phase.MAP, self.cluster.map_slots_per_machine),
+                (Phase.REDUCE, self.cluster.reduce_slots_per_machine),
+            ):
+                self.vc[phase].set_slots(
+                    max(1, self.cluster.slots(phase) - n_down * per)
+                )
+        self._rank_dirty()
+
+    def on_sample_lost(self, att) -> None:
+        """A completed sample task's duration observation was dropped in
+        flight: re-request a replacement sample so the size estimate is
+        fit from real observations.  Fires before ``on_task_complete``,
+        whose normal refit/sync path then sees the updated sample set."""
+        if not self.rank.needs_estimates:
+            return
+        js = self.jobs.get(att.spec.job_id)
+        if js is None:
+            return
+        self.training.lose_sample(js, att.spec.phase, att.spec.key)
         self._rank_dirty(att.spec.phase)
 
     def _paranoid_check(self, view: ClusterView, phase: Phase) -> None:

@@ -366,6 +366,41 @@ class Scheduler(abc.ABC):
         # KILL re-queues the task: the job has pending demand again.
         self._jobs_pending[att.spec.phase.value][att.spec.job_id] = None
 
+    # -- fault hooks (executor -> scheduler; see repro.core.faults) ----------
+    def on_task_failed(self, att: TaskAttempt) -> None:
+        """The task just transitioned to FAILED (injected failure or
+        machine crash).  Its progress has been reset to 0 by the executor;
+        it re-enters PENDING later via ``on_task_readmitted``.  A FAILED
+        task is *not* actionable demand, so the job may drop out of every
+        demand index for the phase while staying phase-live."""
+        self._index_remove(att.spec.key)
+        self._svc_mark(att)  # progress reset to 0: discards counted service
+        js = self.jobs.get(att.spec.job_id)
+        if js is not None and not js.n_suspended(att.spec.phase):
+            # Covers FAILED-from-SUSPENDED (machine crash while swapped out).
+            self._jobs_suspended[att.spec.phase.value].pop(
+                att.spec.job_id, None
+            )
+
+    def on_task_readmitted(self, att: TaskAttempt) -> None:
+        """The task's re-admission backoff expired (FAILED -> PENDING)."""
+        self._run_epoch += 1
+        self._jobs_pending[att.spec.phase.value][att.spec.job_id] = None
+
+    def on_machine_crashed(self, machine: int) -> None:
+        """A machine went down; its tasks fail separately through
+        ``on_task_failed``.  Free-slot availability changed."""
+        self._run_epoch += 1
+
+    def on_machine_recovered(self, machine: int) -> None:
+        self._run_epoch += 1
+
+    def on_sample_lost(self, att: TaskAttempt) -> None:
+        """Fault layer: a completed task's size-sample observation was
+        dropped before reaching the estimator.  Fired immediately before
+        ``on_task_complete`` for the same task; only estimate-driven
+        schedulers react (see HFSPScheduler)."""
+
     def _svc_mark(self, att: TaskAttempt) -> None:
         """Fold the task's materialized ``progress`` into the attained-
         service counter (O(1); exact because executors materialize

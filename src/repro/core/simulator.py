@@ -60,6 +60,7 @@ import itertools
 import math
 from dataclasses import dataclass, field
 
+from repro.core.faults import FaultInjector, FaultModel
 from repro.core.scheduler import Action, Kill, Resume, Scheduler, Start, Suspend
 from repro.core.types import (
     ClusterSpec,
@@ -71,7 +72,7 @@ from repro.core.types import (
     TaskState,
 )
 
-_ARRIVAL, _COMPLETE, _PROGRESS, _TICK = 0, 1, 2, 3
+_ARRIVAL, _COMPLETE, _PROGRESS, _TICK, _FAULT = 0, 1, 2, 3, 4
 
 
 @dataclass
@@ -88,6 +89,10 @@ class SimConfig:
     #: (legacy, bit-identical); eps > 0 = one pass per event window (see
     #: module docstring for the determinism contract).
     event_epsilon: float = 0.0
+    #: Deterministic fault injection (repro.core.faults / docs/faults.md);
+    #: None or an all-zero-rate model leaves the fault layer entirely off
+    #: — zero-fault runs are bit-identical to pre-fault builds.
+    faults: FaultModel | None = None
 
 
 class EventLimitReached(RuntimeError):
@@ -117,6 +122,9 @@ class SimResult:
     # sojourn-vs-overhead tradeoff reads per pass counts per cell.
     passes: int = 0
     events: int = 0
+    # Fault-layer counters + trace length (FaultInjector.stats_dict);
+    # None when the fault layer is disabled.
+    faults: dict | None = None
 
     @property
     def sojourn(self) -> dict[int, float]:
@@ -148,6 +156,7 @@ class Simulator:
         track_timeline: bool | None = None,
         progress_delta: float | None = None,
         event_epsilon: float | None = None,
+        faults: FaultModel | None = None,
         config: SimConfig | None = None,
     ):
         # The knob kwargs default to None sentinels and resolve through
@@ -164,6 +173,7 @@ class Simulator:
                 ("track_timeline", track_timeline),
                 ("progress_delta", progress_delta),
                 ("event_epsilon", event_epsilon),
+                ("faults", faults),
             )
             if val is not None
         }
@@ -228,11 +238,36 @@ class Simulator:
         # scheduler-overhead benchmarks and the epsilon-sweep reports.
         self.events_processed = 0
         self.passes = 0
+        # -- fault layer (repro.core.faults; active only when enabled) --
+        fm = config.faults
+        self.faults = fm if (fm is not None and fm.enabled) else None
+        self._injector = (
+            FaultInjector(self.faults, cluster.num_machines)
+            if self.faults is not None
+            else None
+        )
+        # Machines currently out of the pool ("crash" | "blacklist").
+        # Slots on a down machine stay inside self._free — free_slots()
+        # filters the VIEW, so the Resume path's `slot in self._free`
+        # assert (intra-pass suspend/resume handover) is untouched.
+        self._machine_down: dict[int, str] = {}
+        # Speculative shadow executions: task key -> (slot, started_at,
+        # generation).  A shadow claims a physical slot but is invisible
+        # to the scheduler (never in _occupied or JobState).
+        self._spec_running: dict[tuple, tuple[SlotKey, float, int]] = {}
+        self._spec_seq = itertools.count()
+        # Outstanding arrivals — machine fault events are moot once the
+        # workload is drained (no arrivals left, no live jobs), which
+        # keeps crash/recover regeneration from inflating the makespan.
+        self._arrivals_left = len(self._jobs)
 
     # ------------------------------------------------------------------
     # ClusterView protocol
     # ------------------------------------------------------------------
     def free_slots(self, phase: Phase) -> list[SlotKey]:
+        if self._machine_down:
+            down = self._machine_down
+            return [s for s in self._free[phase] if s.machine not in down]
         return list(self._free[phase])
 
     def slot_occupant(self, slot: SlotKey) -> TaskAttempt | None:
@@ -286,7 +321,12 @@ class Simulator:
                 js.first_dispatch_time = now
                 self.result.first_dispatch[att.spec.job_id] = now
             ep = self._bump(att.spec.key)
-            self._push(now + att.remaining, _COMPLETE, (att, ep))
+            if self._injector is not None:
+                self._arm_fate(att, ep, now)
+            rem = att.remaining
+            if att.rate != 1.0:
+                rem = rem / att.rate  # straggling attempt: dilated wall time
+            self._push(now + rem, _COMPLETE, (att, ep))
             if (
                 att.spec.phase is Phase.REDUCE
                 and att.remaining > self.progress_delta
@@ -316,7 +356,12 @@ class Simulator:
             )
             self._susp_total -= att.spec.state_bytes
             ep = self._bump(att.spec.key)
-            self._push(now + att.remaining, _COMPLETE, (att, ep))
+            if self._injector is not None:
+                self._arm_fate(att, ep, now)
+            rem = att.remaining
+            if att.rate != 1.0:
+                rem = rem / att.rate
+            self._push(now + rem, _COMPLETE, (att, ep))
             self.scheduler.on_task_resumed(att, slot)
         elif isinstance(action, Suspend):
             att = action.attempt
@@ -325,9 +370,10 @@ class Simulator:
             del self._occupied[slot]
             del self._occupied_by_phase[slot.phase][slot]
             self._free[slot.phase][slot] = None
-            att.progress = min(
-                att.spec.duration, att.progress + (now - att.started_at)
-            )
+            elapsed = now - att.started_at
+            if att.rate != 1.0:
+                elapsed *= att.rate  # straggling attempt accrued work slower
+            att.progress = min(att.spec.duration, att.progress + elapsed)
             self._job_state(att.spec.job_id).transition(att, TaskState.SUSPENDED)
             att.suspended_at = now
             self._bump(att.spec.key)
@@ -335,6 +381,9 @@ class Simulator:
             self._susp_bytes[m] = self._susp_bytes.get(m, 0) + att.spec.state_bytes
             self._susp_count[m] = self._susp_count.get(m, 0) + 1
             self._susp_total += att.spec.state_bytes
+            if self._injector is not None:
+                self._cancel_shadow(att.spec.key)
+                att.rate = 1.0  # a later Resume draws a fresh fate
             self.scheduler.on_task_suspended(att)
         elif isinstance(action, Kill):
             att = action.attempt
@@ -348,6 +397,9 @@ class Simulator:
             att.machine = None
             att.started_at = None
             self._bump(att.spec.key)
+            if self._injector is not None:
+                self._cancel_shadow(att.spec.key)
+                att.rate = 1.0
             self.scheduler.on_task_killed(att)
         else:  # pragma: no cover - defensive
             raise TypeError(f"unknown action {action!r}")
@@ -356,6 +408,7 @@ class Simulator:
     # Event processing
     # ------------------------------------------------------------------
     def _on_arrival(self, spec: JobSpec) -> None:
+        self._arrivals_left -= 1
         self.result.arrival[spec.job_id] = self._now
         self.scheduler.on_job_arrival(spec, self._now)
         # Jobs with no tasks at all complete immediately.
@@ -375,6 +428,11 @@ class Simulator:
         att.progress = att.spec.duration
         self._job_state(att.spec.job_id).transition(att, TaskState.DONE)
         self._bump(att.spec.key)
+        if self._injector is not None:
+            att.rate = 1.0
+            self._cancel_shadow(att.spec.key)  # primary won the race
+            self._injector.note_success(att.machine)
+            self._maybe_lose_sample(att)  # must precede on_task_complete
         self.scheduler.on_task_complete(att.spec.job_id, att.spec.key, self._now)
         js = self._job_state(att.spec.job_id)
         if js.is_done() and js.completion_time is None:
@@ -386,12 +444,308 @@ class Simulator:
         if att.state is not TaskState.RUNNING:
             return
         elapsed = self._now - att.started_at
-        # Fraction of this task's input processed so far (unit rate).
-        worked = att.progress + elapsed
+        # Fraction of this task's input processed so far.  A straggling
+        # attempt accrues work at att.rate, but the scheduler still sees
+        # wall-clock `elapsed` — exactly the skewed signal a real
+        # heartbeat would deliver (the sigma = Delta/p estimator then
+        # over-estimates the straggler's size, as on a real cluster).
+        worked = att.progress + (
+            elapsed if att.rate == 1.0 else elapsed * att.rate
+        )
         fraction = min(1.0, worked / att.spec.duration)
         self.scheduler.on_task_progress(
             att.spec.job_id, att.spec.key, fraction, elapsed, self._now
         )
+
+    # ------------------------------------------------------------------
+    # Fault layer (repro.core.faults; see docs/faults.md).  Nothing below
+    # is reachable when SimConfig.faults is disabled — zero-fault runs
+    # stay bit-identical to pre-fault builds.
+    # ------------------------------------------------------------------
+    def _arm_fate(self, att: TaskAttempt, epoch: int, now: float) -> None:
+        """Draw the (re)started attempt's fate and schedule its injected
+        failure and/or speculative-execution check."""
+        inj = self._injector
+        fail_at, rate = inj.attempt_fate(att)
+        att.rate = rate
+        if rate != 1.0:
+            inj.stats["stragglers"] += 1
+            inj.record(now, "straggle", att.spec.key, att.attempts)
+            if inj.model.speculation:
+                # When a nominal-speed attempt would have finished, check
+                # whether a speculative copy is worth launching.
+                self._push(
+                    now + att.remaining, _FAULT, ("spec_check", att, epoch)
+                )
+        if fail_at is not None:
+            if att.failures < inj.model.max_task_retries:
+                wall = att.remaining * fail_at / rate
+                self._push(now + wall, _FAULT, ("taskfail", att, epoch))
+            else:
+                # Retry budget spent: stop injecting new failures into
+                # this task — it reruns cleanly to completion, so no job
+                # is ever lost — and account for the suppression.
+                inj.stats["retries_exhausted"] += 1
+
+    def _maybe_lose_sample(self, att: TaskAttempt) -> None:
+        """Estimation-sample loss: drop this completed attempt's duration
+        observation before the TrainingModule records it."""
+        inj = self._injector
+        if inj.model.sample_loss_rate <= 0.0:
+            return
+        tr = getattr(self.scheduler, "training", None)
+        if tr is None:
+            return
+        jid, phase = att.spec.job_id, att.spec.phase
+        if not tr.is_training(jid, phase):
+            return
+        if att.spec.key not in tr.sample_keys(jid, phase):
+            return
+        if inj.sample_lost(att):
+            inj.stats["sample_losses"] += 1
+            inj.record(self._now, "sample_lost", att.spec.key)
+            self.scheduler.on_sample_lost(att)
+
+    def _cancel_shadow(self, key: tuple) -> None:
+        """Tear down the speculative copy of ``key`` — its primary
+        completed, suspended, was killed, failed, or crashed out from
+        under it (so any pending spec_done event is now moot)."""
+        rec = self._spec_running.pop(key, None)
+        if rec is None:
+            return
+        slot, started, _gen = rec
+        self._free[slot.phase][slot] = None
+        inj = self._injector
+        inj.stats["work_lost_s"] += max(0.0, self._now - started)
+        inj.stats["speculative_losses"] += 1
+        inj.record(self._now, "spec_cancel", key)
+
+    def _fail_task(self, att: TaskAttempt, reason: str) -> None:
+        """Fail one live attempt (injected failure or machine crash):
+        discard its progress, hand it to the scheduler as FAILED, and
+        schedule the re-admission after the capped exponential backoff."""
+        now = self._now
+        inj = self._injector
+        js = self._job_state(att.spec.job_id)
+        if att.state is TaskState.RUNNING:
+            slot = self._slot_by_task.pop(att.spec.key)
+            del self._occupied[slot]
+            del self._occupied_by_phase[slot.phase][slot]
+            self._free[slot.phase][slot] = None
+            elapsed = now - att.started_at
+            if att.rate != 1.0:
+                elapsed *= att.rate
+            inj.stats["work_lost_s"] += att.progress + max(0.0, elapsed)
+            self._cancel_shadow(att.spec.key)
+        elif att.state is TaskState.SUSPENDED:
+            # The swapped-out context dies with its host machine.
+            m = att.machine if att.machine is not None else -1
+            self._susp_bytes[m] = (
+                self._susp_bytes.get(m, 0) - att.spec.state_bytes
+            )
+            self._susp_count[m] = self._susp_count.get(m, 0) - 1
+            self._susp_total -= att.spec.state_bytes
+            inj.stats["work_lost_s"] += att.progress
+        else:  # pragma: no cover - callers only fail live attempts
+            return
+        att.progress = 0.0
+        att.rate = 1.0
+        att.failures += 1
+        # Transition BEFORE clearing att.machine: the leaving-SUSPENDED
+        # index removal in JobState.transition is machine-keyed.
+        js.transition(att, TaskState.FAILED)
+        att.machine = None
+        att.started_at = None
+        self._bump(att.spec.key)
+        self.scheduler.on_task_failed(att)
+        inj.record(now, reason, att.spec.key, att.failures)
+        inj.stats["retries"] += 1
+        self._push(
+            now + inj.backoff(att.failures), _FAULT,
+            ("readmit", att, att.failures),
+        )
+
+    def _fault_moot(self, payload: tuple) -> bool:
+        """Whether a popped _FAULT event is stale.  Checked before the
+        event may advance the clock: a moot fault event must not inflate
+        the makespan or regenerate further machine churn."""
+        kind = payload[0]
+        if kind in ("crash", "recover", "probation"):
+            return self._arrivals_left == 0 and not self.scheduler._live
+        if kind in ("taskfail", "spec_check"):
+            att, ep = payload[1], payload[2]
+            return (
+                self._epoch.get(att.spec.key) != ep
+                or att.state is not TaskState.RUNNING
+            )
+        if kind == "readmit":
+            att, gen = payload[1], payload[2]
+            return att.state is not TaskState.FAILED or att.failures != gen
+        if kind == "spec_done":
+            att, gen = payload[1], payload[2]
+            rec = self._spec_running.get(att.spec.key)
+            return rec is None or rec[2] != gen
+        return False  # pragma: no cover - defensive
+
+    def _on_fault(self, payload: tuple) -> None:
+        kind = payload[0]
+        if kind == "crash":
+            self._on_machine_crash(payload[1])
+        elif kind == "recover":
+            self._on_machine_recover(payload[1])
+        elif kind == "probation":
+            self._on_probation_end(payload[1])
+        elif kind == "taskfail":
+            self._on_task_fail_event(payload[1])
+        elif kind == "readmit":
+            self._on_readmit(payload[1])
+        elif kind == "spec_check":
+            self._on_spec_check(payload[1], payload[2])
+        elif kind == "spec_done":
+            self._on_spec_done(payload[1])
+        else:  # pragma: no cover - defensive
+            raise ValueError(f"unknown fault event {kind!r}")
+
+    def _on_machine_crash(self, m: int) -> None:
+        inj = self._injector
+        now = self._now
+        was_up = m not in self._machine_down
+        self._machine_down[m] = "crash"  # upgrades a blacklist entry
+        inj.stats["machine_crashes"] += 1
+        inj.record(now, "crash", m)
+        # Fail every attempt RUNNING on the machine...
+        for phase in (Phase.MAP, Phase.REDUCE):
+            for slot, att in list(self._occupied_by_phase[phase].items()):
+                if slot.machine == m:
+                    inj.stats["crash_task_failures"] += 1
+                    self._fail_task(att, "crash_taskfail")
+        # ...every attempt SUSPENDED on it...
+        for js in list(self.scheduler._live.values()):
+            for phase in (Phase.MAP, Phase.REDUCE):
+                bucket = js.suspended_by_machine(phase).get(m)
+                for key in list(bucket) if bucket else ():
+                    inj.stats["crash_task_failures"] += 1
+                    self._fail_task(js.tasks[key], "crash_taskfail")
+        # ...and every speculative shadow it hosted.
+        for key, rec in list(self._spec_running.items()):
+            if rec[0].machine == m:
+                self._cancel_shadow(key)
+        if was_up:
+            self.scheduler.on_machine_crashed(m)
+        self._push(now + inj.next_recover_delay(m), _FAULT, ("recover", m))
+
+    def _on_machine_recover(self, m: int) -> None:
+        inj = self._injector
+        if self._machine_down.get(m) == "crash":
+            del self._machine_down[m]
+            inj.stats["machine_recoveries"] += 1
+            inj.record(self._now, "recover", m)
+            self.scheduler.on_machine_recovered(m)
+        # Chain the next outage regardless: the crash/recover cadence is
+        # a property of the machine, not of its blacklist state.
+        self._push(
+            self._now + inj.next_outage_delay(m), _FAULT, ("crash", m)
+        )
+
+    def _on_probation_end(self, m: int) -> None:
+        inj = self._injector
+        inj.end_probation(m)
+        inj.stats["probations_ended"] += 1
+        if self._machine_down.get(m) == "blacklist":
+            del self._machine_down[m]
+            inj.record(self._now, "unblacklist", m)
+            self.scheduler.on_machine_recovered(m)
+
+    def _on_task_fail_event(self, att: TaskAttempt) -> None:
+        inj = self._injector
+        m = att.machine
+        inj.stats["task_failures"] += 1
+        self._fail_task(att, "taskfail")
+        # Injected failures strike the hosting machine; crash-induced
+        # ones don't (the machine is already down and not at fault).
+        if m is not None and inj.note_injected_failure(m):
+            if m not in self._machine_down:
+                self._machine_down[m] = "blacklist"
+                inj.stats["blacklists"] += 1
+                inj.record(self._now, "blacklist", m)
+                self._push(
+                    self._now + inj.model.probation_s, _FAULT,
+                    ("probation", m),
+                )
+                self.scheduler.on_machine_crashed(m)
+
+    def _on_readmit(self, att: TaskAttempt) -> None:
+        """Re-admission backoff served: FAILED -> PENDING."""
+        self._job_state(att.spec.job_id).transition(att, TaskState.PENDING)
+        self._injector.record(self._now, "readmit", att.spec.key)
+        self.scheduler.on_task_readmitted(att)
+
+    def _on_spec_check(self, att: TaskAttempt, epoch: int) -> None:
+        """A straggling attempt outlived its nominal completion time:
+        launch a speculative copy on a spare slot, or keep checking."""
+        inj = self._injector
+        key = att.spec.key
+        if key in self._spec_running:
+            return  # pragma: no cover - single spec_check per epoch
+        # Work the straggler still has left, in nominal seconds.
+        worked = att.progress + (self._now - att.started_at) * att.rate
+        remaining = att.spec.duration - worked
+        if remaining <= inj.model.speculation_min_remaining:
+            return
+        if att.spec.duration >= remaining / att.rate:
+            return  # a from-scratch copy would lose the race anyway
+        phase = att.spec.phase
+        slots = self.free_slots(phase)
+        slot = next(
+            (s for s in slots if s.machine != att.machine),
+            slots[0] if slots else None,
+        )
+        if slot is None:
+            # No spare capacity right now: check again next heartbeat.
+            self._push(
+                self._now + self.heartbeat, _FAULT,
+                ("spec_check", att, epoch),
+            )
+            return
+        del self._free[phase][slot]
+        gen = next(self._spec_seq)
+        self._spec_running[key] = (slot, self._now, gen)
+        inj.stats["speculative_launches"] += 1
+        inj.record(self._now, "spec_launch", key, slot.machine)
+        self._push(
+            self._now + att.spec.duration, _FAULT, ("spec_done", att, gen)
+        )
+
+    def _on_spec_done(self, att: TaskAttempt) -> None:
+        """The speculative copy finished first and wins the race: the
+        straggling primary is killed, the task completes on the shadow's
+        machine."""
+        inj = self._injector
+        key = att.spec.key
+        slot, _started, _gen = self._spec_running.pop(key)
+        self._free[slot.phase][slot] = None
+        # The primary is guaranteed RUNNING here: any suspend / kill /
+        # fail / complete of it cancels the shadow, mooting this event.
+        assert att.state is TaskState.RUNNING, (key, att.state)
+        pslot = self._slot_by_task.pop(key)
+        del self._occupied[pslot]
+        del self._occupied_by_phase[pslot.phase][pslot]
+        self._free[pslot.phase][pslot] = None
+        elapsed = (self._now - att.started_at) * att.rate
+        inj.stats["work_lost_s"] += att.progress + max(0.0, elapsed)
+        inj.stats["speculative_wins"] += 1
+        inj.record(self._now, "spec_win", key, slot.machine)
+        att.progress = att.spec.duration
+        att.rate = 1.0
+        js = self._job_state(att.spec.job_id)
+        js.transition(att, TaskState.DONE)
+        att.machine = slot.machine
+        self._bump(key)
+        inj.note_success(slot.machine)
+        self._maybe_lose_sample(att)
+        self.scheduler.on_task_complete(att.spec.job_id, key, self._now)
+        if js.is_done() and js.completion_time is None:
+            self._complete_job(js)
 
     def _complete_job(self, js: JobState) -> None:
         js.completion_time = self._now
@@ -433,6 +787,12 @@ class Simulator:
             self._arrivals_seeded = True
             for spec in self._jobs:
                 self._push(spec.arrival_time, _ARRIVAL, spec)
+            inj = self._injector
+            if inj is not None and inj.model.machine_mtbf > 0.0:
+                # Seed each machine's first outage; crash/recover chains
+                # regenerate from there (repro.core.faults).
+                for m in range(self.spec.num_machines):
+                    self._push(inj.next_outage_delay(m), _FAULT, ("crash", m))
         n_events = 0
         eps = self.event_epsilon
         while self._heap:
@@ -455,6 +815,11 @@ class Simulator:
                     " — scheduler livelock?"
                 )
             t, kind, _, payload = heapq.heappop(self._heap)
+            if kind == _FAULT and self._fault_moot(payload):
+                # Dropped before the clock moves: a stale fault event
+                # must neither inflate the makespan nor re-arm machine
+                # churn after the workload has drained.
+                continue
             self.events_processed += 1
             if eps > 0.0 and self._window_end is None:
                 # New coalescing window, anchored at its head event.
@@ -471,6 +836,8 @@ class Simulator:
             elif kind == _TICK:
                 self._tick_pending = False
                 self.scheduler.on_tick(self._now)
+            elif kind == _FAULT:
+                self._on_fault(payload)
             # Coalesce before scheduling a pass: with eps > 0, any event
             # inside the open window; with eps = 0 (legacy), only
             # same-timestamp ARRIVAL/COMPLETE batches.
@@ -484,6 +851,8 @@ class Simulator:
                     continue
             self._run_pass()
         self.result.stats = self.scheduler.stats
+        if self._injector is not None:
+            self.result.faults = self._injector.stats_dict()
         self.result.makespan = self._now
         self.result.passes = self.passes
         self.result.events = self.events_processed

@@ -46,6 +46,11 @@ class TaskState(enum.Enum):
     PENDING = "pending"
     RUNNING = "running"
     SUSPENDED = "suspended"  # EAGER-preempted; state swapped out
+    # Failed (injected fault or machine crash) and sitting out its
+    # re-admission backoff.  Not schedulable demand: a FAILED task is
+    # neither pending nor live until the fault layer re-admits it
+    # (FAILED -> PENDING).  The job's phase stays unfinished throughout.
+    FAILED = "failed"
     DONE = "done"
 
     __hash__ = object.__hash__  # see Phase.__hash__
@@ -124,6 +129,11 @@ class TaskAttempt:
     # Monotone per-job suspension order (assigned by JobState.transition);
     # lets machine-grouped scans replay the suspension-bucket order exactly.
     susp_seq: int = 0
+    # Fault layer (repro.core.faults): execution-speed multiplier of the
+    # current attempt (1.0 nominal, <1.0 while straggling) and the number
+    # of injected/crash failures this task has absorbed so far.
+    rate: float = 1.0
+    failures: int = 0
 
     @property
     def remaining(self) -> float:

@@ -343,6 +343,17 @@ class VirtualCluster:
         self._order_cache = None
         self._pos_cache = None
 
+    def set_slots(self, n: int) -> None:
+        """Resize the virtual capacity (fault layer: machines leaving or
+        rejoining the cluster).  Pending lazy aging is replayed first —
+        it accrued under the old capacity."""
+        if n == self.slots:
+            return
+        self._materialize()
+        self.slots = n
+        self._invalidate_alloc()
+        self._invalidate_order()
+
     # -- membership ---------------------------------------------------------
     def add_job(
         self,

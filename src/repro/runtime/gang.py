@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointStore
+from repro.core.faults import FirstFinisherWins
 from repro.core.scheduler import Kill, Resume, Scheduler, Start, Suspend
 from repro.core.types import (
     ClusterSpec,
@@ -142,8 +143,9 @@ class GangRuntime:
         self.completions: dict[int, float] = {}
         self.arrivals: dict[int, float] = {}
         self.events: list[tuple[float, str, str]] = []
-        self.stats = {"speculative": 0, "failures": 0, "offloads": 0,
-                      "restores": 0, "kills": 0}
+        self.stats = {"speculative": 0, "spec_wins": 0, "spec_losses": 0,
+                      "failures": 0, "offloads": 0, "restores": 0, "kills": 0}
+        self._ffw = FirstFinisherWins()
 
     # -- ClusterView protocol -------------------------------------------------
     def free_slots(self, phase: Phase) -> list[SlotKey]:
@@ -225,6 +227,10 @@ class GangRuntime:
                 rt.steps_done = found[0]
             self.events.append((self.now(), "failure", f"job{jid}"))
             return  # quantum must be re-run (task not completed)
+        # Pre-quantum snapshot references: the step functions are pure, so
+        # the tree rt.state points at now survives the quantum unchanged —
+        # a speculative re-execution restarts from exactly here.
+        pre_state, pre_steps = rt.state, rt.steps_done
         for s in range(job.steps_per_quantum):
             step_idx = rt.steps_done + s
             if step_idx >= job.total_steps:
@@ -237,15 +243,68 @@ class GangRuntime:
         rt.steps_done = min(rt.steps_done + job.steps_per_quantum, job.total_steps)
         dt = time.time() - t0
         rt.quantum_times.append(dt)
-        # Straggler detection: a quantum way beyond the median would be
-        # speculatively re-executed on another gang; we record it (the
-        # re-execution result is identical — deterministic data).
+        # Straggler mitigation: a quantum way beyond the median is
+        # speculatively re-executed on a spare gang from the pre-quantum
+        # snapshot; the first finisher wins and the loser's gang-time is
+        # discarded.  (Synchronous runtime: the race is decided by the
+        # two attempts' measured wall times.)
         med = float(np.median(rt.quantum_times))
         if len(rt.quantum_times) >= 3 and dt > self.straggler_factor * med:
-            self.stats["speculative"] += 1
-            self.events.append((self.now(), "speculative", f"job{jid}"))
+            spare = self._spare_slot(exclude_machine=att.machine)
+            if spare is not None:
+                self.stats["speculative"] += 1
+                self.events.append((
+                    self.now(), "speculative",
+                    f"job{jid} gang{att.machine}->gang{spare.machine}",
+                ))
+                rt.state = self._race_speculative(
+                    rt, pre_state, pre_steps, dt, rt.state
+                )
         # Durable snapshot at quantum boundary (fault tolerance).
         self.store.save(f"job{jid}", rt.steps_done, rt.state)
+
+    def _spare_slot(self, exclude_machine: int | None) -> SlotKey | None:
+        """A free gang for a speculative copy, preferably elsewhere (the
+        straggling gang is the suspect)."""
+        free = self._free[Phase.MAP]
+        for s in free:
+            if s.machine != exclude_machine:
+                return s
+        return free[0] if free else None
+
+    def _race_speculative(
+        self, rt: _JobRuntime, pre_state, pre_steps: int, primary_dt: float,
+        primary_state,
+    ):
+        """Re-run the quantum from the pre-quantum snapshot on the spare
+        gang and race it against the straggling primary: whichever attempt
+        finished faster wins (FirstFinisherWins), the loser is discarded.
+        Deterministic data makes the race safe — both attempts compute the
+        same state, only the accounting differs."""
+        job = rt.job
+        t0 = time.time()
+        state = pre_state
+        for s in range(job.steps_per_quantum):
+            step_idx = pre_steps + s
+            if step_idx >= job.total_steps:
+                break
+            batch = {
+                k: jnp.asarray(v) for k, v in rt.data.batch(step_idx).items()
+            }
+            state, _ = rt.step_fn(state, batch)
+        shadow_dt = time.time() - t0
+        key = (job.job_id, pre_steps)
+        self._ffw.reset(key)
+        for name, d in sorted(
+            (("primary", primary_dt), ("shadow", shadow_dt)),
+            key=lambda x: x[1],
+        ):
+            self._ffw.finish(key, name)
+        if self._ffw.winner(key) == "shadow":
+            self.stats["spec_wins"] += 1
+            return state
+        self.stats["spec_losses"] += 1
+        return primary_state
 
     # -- action application -------------------------------------------------------
     def _apply(self, action) -> bool:

@@ -23,6 +23,7 @@ from repro.scenarios.report import matrix_report, scenario_report
 from repro.scenarios.runner import run_scenario, simulate
 from repro.scenarios.spec import (
     ClusterAxis,
+    FaultAxis,
     ScenarioSpec,
     SchedulerAxis,
     SweepSpec,
@@ -33,6 +34,7 @@ from repro.scenarios.trace import export_trace, load_trace
 
 __all__ = [
     "ClusterAxis",
+    "FaultAxis",
     "ResultStore",
     "ScenarioSpec",
     "SchedulerAxis",

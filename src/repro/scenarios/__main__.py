@@ -58,12 +58,25 @@ def _cmd_run(args) -> int:
     print(f"== sweep {sweep.name}: {total} cells ==")
 
     def progress(cid: str, result: dict) -> None:
-        print(
+        if result.get("quarantined"):
+            print(
+                f"  {cid}: QUARANTINED after {result['attempts']} attempts "
+                f"({result['error']})",
+                flush=True,
+            )
+            return
+        line = (
             f"  {cid}: mean_sojourn {result['mean_sojourn_s']:.1f}s  "
             f"makespan {result['makespan_s']:.0f}s  "
-            f"wall {result['wall_s']:.2f}s",
-            flush=True,
+            f"wall {result['wall_s']:.2f}s"
         )
+        if result.get("faults"):
+            f = result["faults"]
+            line += (
+                f"  goodput {f['goodput']:.3f}  "
+                f"retries {f['retries']}  spec_wins {f['speculative_wins']}"
+            )
+        print(line, flush=True)
 
     results = run_sweep(
         sweep,
@@ -73,17 +86,22 @@ def _cmd_run(args) -> int:
         progress=progress,
     )
     matrix = matrix_report(results)
-    print(f"== matrix ({len(results)}/{total} cells) ==")
-    for cid in sorted(results, key=lambda c: matrix["mean_sojourn_s"][c]):
-        print(f"  {cid}: mean_sojourn {matrix['mean_sojourn_s'][cid]:.1f}s")
+    # Quarantined cells (self-healing sweep's poison records) carry no
+    # metrics: matrix_report lists and excludes them.
+    means = matrix["mean_sojourn_s"]
+    print(f"== matrix ({len(means)}/{total} cells) ==")
+    for cid in sorted(means, key=lambda c: means[c]):
+        print(f"  {cid}: mean_sojourn {means[cid]:.1f}s")
+    for cid in matrix["quarantined"]:
+        print(f"  {cid}: QUARANTINED ({results[cid]['error']})")
     # Classify by the expanded spec, not the cell-id string: a grid that
     # does not sweep scheduler.policy produces ids without a policy key.
     policy_of = {cid: spec.scheduler.policy for cid, spec in sweep.expand()}
-    hfsp_cells = [c for c in results if policy_of.get(c) == "hfsp"]
-    other_cells = [c for c in results if policy_of.get(c) != "hfsp"]
+    hfsp_cells = [c for c in means if policy_of.get(c) == "hfsp"]
+    other_cells = [c for c in means if policy_of.get(c) != "hfsp"]
     if hfsp_cells and other_cells:
-        best_hfsp = min(matrix["mean_sojourn_s"][c] for c in hfsp_cells)
-        best_other = min(matrix["mean_sojourn_s"][c] for c in other_cells)
+        best_hfsp = min(means[c] for c in hfsp_cells)
+        best_other = min(means[c] for c in other_cells)
         print(
             f"hfsp strictly lowest mean sojourn: {best_hfsp < best_other} "
             f"(hfsp {best_hfsp:.1f}s vs best-other {best_other:.1f}s)"

@@ -194,6 +194,42 @@ def _seed_robustness() -> SweepSpec:
     )
 
 
+@register_preset("paper-faults")
+def _paper_faults() -> SweepSpec:
+    """Beyond-paper robustness matrix: scheduling under machine churn,
+    task failures, stragglers, and estimation-sample loss (see
+    docs/faults.md).  Grid 1 sweeps failure intensity x policy — does the
+    HFSP win survive a hostile cluster, and at what goodput?  Grid 2
+    holds a mid-intensity fault bundle fixed and sweeps the preemption
+    primitive (KILL discards progress a failure-heavy regime already
+    taxes; EAGER's suspended state dies with crashed machines).  Every
+    cell is bit-reproducible: the fault trace derives from
+    ``faults.seed``, never from global RNG state."""
+    base = paper_fb_base().override(**{
+        "faults.seed": 7,
+        "faults.machine_mtbf": 3000.0,
+        "faults.machine_mttr": 120.0,
+        "faults.straggler_prob": 0.05,
+        "faults.straggler_factor": 4.0,
+        "faults.sample_loss_rate": 0.1,
+        "name": "paper-faults",
+    })
+    return SweepSpec(
+        name="paper-faults",
+        base=base,
+        grids=(
+            SweepSpec.grid(**{
+                "faults.task_fail_rate": (0.02, 0.1),
+                "scheduler.policy": ("hfsp", "fifo", "fair", "srpt", "psbs"),
+            }),
+            SweepSpec.grid(**{
+                "faults.task_fail_rate": (0.05,),
+                "scheduler.preemption": ("eager", "wait", "kill"),
+            }),
+        ),
+    )
+
+
 @register_preset("ml-workload")
 def _ml_workload() -> SweepSpec:
     """Beyond-paper: the TPU-adaptation ML workload under all policies."""

@@ -62,11 +62,24 @@ def scenario_report(
     # "scenario-level what-if reports" item asked for.
     diag = getattr(scheduler, "whatif_diagnostics", None)
     whatif = diag() if callable(diag) else None
+    # Fault-layer block (None for fault-free cells): injector counters
+    # plus goodput = useful / (useful + lost) where useful is the total
+    # size of completed jobs and lost is the work thrown away on
+    # failures, crashes, and losing speculative copies.
+    faults = None
+    if res.faults is not None:
+        useful = sum(size_of[j] for j in res.completion if j in size_of)
+        lost = res.faults.get("work_lost_s", 0.0)
+        faults = dict(res.faults)
+        faults["goodput"] = (
+            useful / (useful + lost) if useful + lost > 0 else 1.0
+        )
     return {
         "spec": spec.to_dict(),
         "wall_s": round(wall_s, 3),
         "makespan_s": res.makespan,
         "jobs_completed": len(res.completion),
+        "jobs_lost": len(jobs) - len(res.completion),
         "mean_sojourn_s": res.mean_sojourn(),
         "sojourn": {
             **_summary_dict(SojournSummary.of(list(soj.values()))),
@@ -86,6 +99,7 @@ def scenario_report(
         "scheduler_passes": res.passes,
         "passes_per_event": round(res.passes / res.events, 4) if res.events else 0.0,
         "whatif": whatif,
+        "faults": faults,
         "stats": {
             "suspensions": st.suspensions,
             "resumes": st.resumes,
@@ -120,7 +134,13 @@ def matrix_report(cells: dict[str, dict]) -> dict:
     ``cells`` maps cell_id -> scenario_report dict.  Returns a compact
     comparison: per-cell mean sojourn plus pairwise mean ratios — the
     "HFSP strictly lowest" acceptance check reads this.
+
+    Quarantined cells (the self-healing sweep runner's poison-cell
+    records, ``{"quarantined": True, ...}``) carry no metrics: they are
+    listed under ``"quarantined"`` and excluded from the comparison.
     """
+    quarantined = sorted(c for c, r in cells.items() if r.get("quarantined"))
+    cells = {c: r for c, r in cells.items() if not r.get("quarantined")}
     means = {cid: c["mean_sojourn_s"] for cid, c in cells.items()}
     ranked = sorted(means, key=lambda c: means[c])
     ratios = {}
@@ -131,6 +151,7 @@ def matrix_report(cells: dict[str, dict]) -> dict:
                 ratios[f"{cid}/{best}"] = means[cid] / means[best]
     return {
         "cells": len(cells),
+        "quarantined": quarantined,
         "mean_sojourn_s": means,
         "best": ranked[0] if ranked else None,
         "mean_ratio_vs_best": ratios,

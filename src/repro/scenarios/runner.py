@@ -16,6 +16,7 @@ import time
 
 from repro.core import (
     ClusterSpec,
+    FaultModel,
     SimConfig,
     SimResult,
     Simulator,
@@ -109,12 +110,22 @@ def _materialize_and_run(
     cluster = build_cluster(spec)
     jobs, class_of = build_workload(spec)
     sch = build_scheduler(spec, cluster)
+    # FaultAxis mirrors FaultModel field-for-field; only an enabled axis
+    # reaches the simulator (a disabled one must leave the executor
+    # bit-identical to a pre-fault build).
+    fm = (
+        FaultModel(**dataclasses.asdict(spec.faults))
+        if spec.faults.enabled
+        else None
+    )
     res = Simulator(
         cluster,
         sch,
         jobs,
         config=SimConfig(
-            heartbeat=spec.heartbeat, event_epsilon=spec.event_epsilon
+            heartbeat=spec.heartbeat,
+            event_epsilon=spec.event_epsilon,
+            faults=fm,
         ),
     ).run()
     return res, class_of, sch, jobs

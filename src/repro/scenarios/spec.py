@@ -124,6 +124,43 @@ class SchedulerAxis:
 
 
 @dataclass(frozen=True)
+class FaultAxis:
+    """Fault-injection axis — field-for-field mirror of
+    :class:`repro.core.faults.FaultModel` (the runner converts with
+    ``FaultModel(**asdict(axis))``), kept separate so the declarative
+    layer stays import-light and plain-JSON.
+
+    All rates default to 0: a default axis is disabled, and a disabled
+    axis is *omitted* from ``to_dict`` so every pre-fault spec hash (and
+    therefore every stored sweep result) stays valid.
+    """
+
+    seed: int = 0
+    machine_mtbf: float = 0.0
+    machine_mttr: float = 60.0
+    task_fail_rate: float = 0.0
+    max_task_retries: int = 5
+    backoff_base: float = 1.0
+    backoff_cap: float = 60.0
+    straggler_prob: float = 0.0
+    straggler_factor: float = 3.0
+    sample_loss_rate: float = 0.0
+    blacklist_threshold: int = 3
+    probation_s: float = 120.0
+    speculation: bool = True
+    speculation_min_remaining: float = 1.0
+
+    @property
+    def enabled(self) -> bool:
+        return (
+            self.machine_mtbf > 0.0
+            or self.task_fail_rate > 0.0
+            or self.straggler_prob > 0.0
+            or self.sample_loss_rate > 0.0
+        )
+
+
+@dataclass(frozen=True)
 class ScenarioSpec:
     """One fully-specified experiment cell."""
 
@@ -138,10 +175,13 @@ class ScenarioSpec:
     #: sweeps can report the sojourn-vs-scheduler-overhead tradeoff per
     #: cell (the ``paper-fb-eps`` preset).
     event_epsilon: float = 0.0
+    #: Fault injection (machine churn, task failures, stragglers, sample
+    #: loss — see repro.core.faults and the ``paper-faults`` preset).
+    faults: FaultAxis = field(default_factory=FaultAxis)
 
     # -- JSON round-trip -----------------------------------------------------
     def to_dict(self) -> dict:
-        return {
+        d = {
             "version": SPEC_VERSION,
             "name": self.name,
             "workload": _axis_dict(self.workload),
@@ -150,6 +190,11 @@ class ScenarioSpec:
             "heartbeat": self.heartbeat,
             "event_epsilon": self.event_epsilon,
         }
+        # Only when enabled: a disabled axis must not perturb the hash
+        # of pre-fault specs (stored sweep results stay resumable).
+        if self.faults.enabled:
+            d["faults"] = _axis_dict(self.faults)
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "ScenarioSpec":
@@ -165,6 +210,7 @@ class ScenarioSpec:
             scheduler=SchedulerAxis(**d.get("scheduler", {})),
             heartbeat=d.get("heartbeat", 3.0),
             event_epsilon=d.get("event_epsilon", 0.0),
+            faults=FaultAxis(**d.get("faults", {})),
         )
 
     # -- identity ------------------------------------------------------------

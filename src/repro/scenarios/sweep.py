@@ -1,4 +1,4 @@
-"""Parallel sweep engine with a resumable on-disk result store.
+"""Parallel sweep engine: resumable result store + self-healing workers.
 
 ``run_sweep`` expands a :class:`~repro.scenarios.spec.SweepSpec` into its
 scenario cells and fans them out across worker *processes* (the simulator
@@ -12,8 +12,27 @@ finish, keyed by ``(cell_id, spec_hash)``:
   ``spec_hash``, so stale stored results are ignored (and recomputed)
   instead of being silently reused;
 * **determinism** — a cell's result is a pure function of its spec (all
-  RNG seeds are spec fields), so parallel/serial execution and any
-  resume order produce identical stores up to line order.
+  RNG seeds, including the fault-injection seed, are spec fields), so
+  parallel/serial execution, any resume order, and any self-healing
+  retry or re-issue produce identical stores up to line order.
+
+Self-healing (the parallel path supervises one spawned process per cell
+attempt, so a sick cell cannot take the sweep down with it):
+
+* **timeout** — an attempt exceeding the per-cell wall-clock budget is
+  killed and counts as a failure;
+* **bounded retry** — a failed cell is re-queued with capped exponential
+  backoff, up to ``max_retries`` times;
+* **quarantine** — a cell failing past its retry budget lands in the
+  store as a poison-cell record ``{"quarantined": True, "error": ...}``
+  instead of aborting the sweep; ``matrix_report`` lists and excludes
+  it.  A resume treats the quarantine record as done — delete its store
+  line to retry the cell;
+* **straggler re-issue** — a cell running far past the median finished
+  wall time gets a second racing attempt on spare capacity; the first
+  finisher wins (:class:`repro.core.faults.FirstFinisherWins`) and the
+  loser is killed.  Purity makes the race safe: both attempts compute
+  the same result.
 
 Workers use the ``spawn`` start method: the parent may hold jax state
 (the vcluster jax backend), which does not survive ``fork``.
@@ -21,13 +40,22 @@ Workers use the ``spawn`` start method: the parent may hold jax state
 
 from __future__ import annotations
 
+import itertools
 import json
 import os
-from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+import time
 from pathlib import Path
 
+from repro.core.faults import FirstFinisherWins
 from repro.scenarios.runner import run_scenario
 from repro.scenarios.spec import ScenarioSpec, SweepSpec
+
+#: Env var naming a JSON file of test-only worker fault hooks —
+#: ``{"hang_once": [cell_ids], "fail_always": [cell_ids], "state_dir":
+#: path}`` — read inside the *spawned* attempt process (a spawn child
+#: cannot see parent monkeypatches, so the self-healing tests inject
+#: hangs/failures through the environment instead).
+_TEST_HOOK_ENV = "_REPRO_SWEEP_TEST_HOOK"
 
 
 class ResultStore:
@@ -64,16 +92,78 @@ class ResultStore:
     def append(self, cell_id: str, spec_hash: str, result: dict) -> None:
         self.path.parent.mkdir(parents=True, exist_ok=True)
         rec = {"cell_id": cell_id, "spec_hash": spec_hash, "result": result}
+        # A crash can lose the previous record's trailing newline while
+        # its JSON survived (load() still recovers it); appending onto
+        # that unterminated line would corrupt BOTH records, so repair
+        # the newline first.
+        lead = ""
+        if self.path.exists():
+            with self.path.open("rb") as f:
+                f.seek(0, os.SEEK_END)
+                if f.tell() > 0:
+                    f.seek(-1, os.SEEK_END)
+                    if f.read(1) != b"\n":
+                        lead = "\n"
         with self.path.open("a") as f:
-            f.write(json.dumps(rec, sort_keys=True) + "\n")
+            f.write(lead + json.dumps(rec, sort_keys=True) + "\n")
             f.flush()
             os.fsync(f.fileno())
 
 
+def _quarantine_record(cid: str, error: str, attempts: int) -> dict:
+    """The poison-cell record stored in place of a scenario report."""
+    return {
+        "quarantined": True,
+        "cell_id": cid,
+        "error": error,
+        "attempts": attempts,
+    }
+
+
 def _run_cell(payload: tuple[str, dict]) -> tuple[str, dict]:
-    """Worker entry point (must be importable for spawn)."""
+    """Compute one cell from its serialized spec."""
     cid, spec_dict = payload
     return cid, run_scenario(ScenarioSpec.from_dict(spec_dict))
+
+
+def _apply_test_hook(cid: str) -> None:
+    path = os.environ.get(_TEST_HOOK_ENV)
+    if not path:
+        return
+    with open(path) as f:
+        hook = json.load(f)
+    if cid in hook.get("fail_always", ()):
+        raise RuntimeError(f"sweep test hook: cell {cid!r} fails")
+    if cid in hook.get("hang_once", ()):
+        marker = Path(hook["state_dir"]) / f"hung-{cid}"
+        if not marker.exists():
+            marker.write_text("hung once\n")
+            time.sleep(3600.0)  # until the supervisor's timeout kills us
+
+
+def _cell_worker(conn, cid: str, spec_dict: dict) -> None:
+    """Spawned per-attempt process entry point: compute the cell, send
+    ("ok", report) or ("err", repr) back over the pipe."""
+    try:
+        _apply_test_hook(cid)
+        _, result = _run_cell((cid, spec_dict))
+        conn.send(("ok", result))
+    except BaseException as e:  # noqa: BLE001 - reported to the supervisor
+        try:
+            conn.send(("err", repr(e)))
+        except Exception:
+            pass
+    finally:
+        conn.close()
+
+
+class _Attempt:
+    """One running cell attempt (a spawned process + its result pipe)."""
+
+    __slots__ = ("cid", "proc", "conn", "started")
+
+    def __init__(self, cid, proc, conn, started):
+        self.cid, self.proc, self.conn, self.started = cid, proc, conn, started
 
 
 def run_sweep(
@@ -82,15 +172,29 @@ def run_sweep(
     workers: int = 0,
     max_cells: int | None = None,
     progress=None,
+    timeout: float | None = 600.0,
+    max_retries: int = 2,
+    retry_backoff: float = 0.5,
+    straggler_factor: float = 4.0,
 ) -> dict[str, dict]:
     """Run (or resume) a sweep; returns {cell_id: scenario_report}.
 
-    ``workers=0`` runs inline (deterministic single-process order,
-    used by tests and small presets); ``workers=N`` fans cells out over N
-    spawn-based processes.  ``max_cells`` bounds how many *new* cells are
+    ``workers=0`` runs inline (deterministic single-process order, used
+    by tests and small presets); ``workers=N`` fans cells out over N
+    spawn-based attempt processes under the self-healing supervisor (see
+    module docstring).  ``max_cells`` bounds how many *new* cells are
     computed this call — the hook tests use it to interrupt a sweep
     mid-grid and assert resume semantics.  ``progress`` is an optional
     ``f(cell_id, result)`` callback invoked as each cell finishes.
+
+    Self-healing knobs (parallel path): ``timeout`` is the per-attempt
+    wall-clock budget in seconds (None = unbounded); a failed or
+    timed-out cell retries up to ``max_retries`` times with capped
+    exponential ``retry_backoff`` before being stored as a quarantine
+    record; an attempt running past ``straggler_factor`` x the median
+    finished wall time is raced by a second attempt (first finisher
+    wins).  The inline path applies retry + quarantine only — there is
+    no process boundary to kill, so no timeout or re-issue.
     """
     if store is not None and not isinstance(store, ResultStore):
         store = ResultStore(store)
@@ -117,36 +221,150 @@ def run_sweep(
 
     if workers <= 1:
         for cid, spec in todo:
-            finish(cid, spec, run_scenario(spec))
+            n_fails = 0
+            while True:
+                try:
+                    finish(cid, spec, run_scenario(spec))
+                    break
+                except Exception as e:  # noqa: BLE001 - bounded retry
+                    n_fails += 1
+                    if n_fails > max_retries:
+                        finish(
+                            cid, spec, _quarantine_record(cid, repr(e), n_fails)
+                        )
+                        break
+                    time.sleep(retry_backoff * (2.0 ** (n_fails - 1)))
         return results
 
-    spec_of = dict(todo)
+    _supervise(
+        todo, workers, finish,
+        timeout=timeout,
+        max_retries=max_retries,
+        retry_backoff=retry_backoff,
+        straggler_factor=straggler_factor,
+    )
+    return results
+
+
+def _supervise(
+    todo: list[tuple[str, ScenarioSpec]],
+    workers: int,
+    finish,
+    *,
+    timeout: float | None,
+    max_retries: int,
+    retry_backoff: float,
+    straggler_factor: float,
+) -> None:
+    """The self-healing parallel executor: one spawned process per cell
+    attempt, supervised for results, failures, timeouts, and stragglers."""
     import multiprocessing
+    from multiprocessing.connection import wait as conn_wait
 
     ctx = multiprocessing.get_context("spawn")
-    failures: dict[str, BaseException] = {}
-    with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
-        cid_of_future = {
-            pool.submit(_run_cell, (cid, spec.to_dict())): cid
-            for cid, spec in todo
-        }
-        pending = set(cid_of_future)
-        while pending:
-            finished, pending = wait(pending, return_when=FIRST_COMPLETED)
-            for fut in finished:
-                # A failing cell must not discard its siblings' finished
-                # work: store everything that succeeded, raise at the end
-                # (resume then recomputes only the failed cells).
-                try:
-                    cid, result = fut.result()
-                except Exception as e:  # noqa: BLE001 - reported below
-                    failures[cid_of_future[fut]] = e
-                    continue
-                finish(cid, spec_of[cid], result)
-    if failures:
-        detail = "; ".join(f"{cid}: {e!r}" for cid, e in sorted(failures.items()))
-        raise RuntimeError(
-            f"{len(failures)} sweep cell(s) failed ({detail}); "
-            f"{len(results)} finished cells were stored"
+    spec_of = dict(todo)
+    # (not_before, launch-order, cid) — backoff-delayed retries re-enter
+    # here; the tiebreaker keeps ordering deterministic.
+    order = itertools.count()
+    queue: list[tuple[float, int, str]] = [
+        (0.0, next(order), cid) for cid, _ in todo
+    ]
+    n_fails: dict[str, int] = {}
+    attempts: dict[str, list[_Attempt]] = {}
+    by_conn: dict[object, _Attempt] = {}
+    ffw = FirstFinisherWins()
+    finished_walls: list[float] = []
+
+    def n_running() -> int:
+        return len(by_conn)
+
+    def launch(cid: str) -> None:
+        parent_conn, child_conn = ctx.Pipe(duplex=False)
+        proc = ctx.Process(
+            target=_cell_worker,
+            args=(child_conn, cid, spec_of[cid].to_dict()),
+            daemon=True,
         )
-    return results
+        proc.start()
+        child_conn.close()
+        att = _Attempt(cid, proc, parent_conn, time.monotonic())
+        attempts.setdefault(cid, []).append(att)
+        by_conn[parent_conn] = att
+
+    def kill(att: _Attempt) -> None:
+        by_conn.pop(att.conn, None)
+        atts = attempts.get(att.cid)
+        if atts and att in atts:
+            atts.remove(att)
+            if not atts:
+                del attempts[att.cid]
+        try:
+            att.conn.close()
+        except Exception:
+            pass
+        if att.proc.is_alive():
+            att.proc.terminate()
+            att.proc.join(5.0)
+            if att.proc.is_alive():  # pragma: no cover - hard hang
+                att.proc.kill()
+        att.proc.join(5.0)
+
+    def attempt_failed(att: _Attempt, error: str) -> None:
+        """One attempt died; the cell fails only when none remain."""
+        cid = att.cid
+        kill(att)
+        if cid in attempts:
+            return  # a racing sibling is still in flight
+        n = n_fails.get(cid, 0) + 1
+        n_fails[cid] = n
+        if n > max_retries:
+            finish(cid, spec_of[cid], _quarantine_record(cid, error, n))
+        else:
+            delay = retry_backoff * (2.0 ** (n - 1))
+            queue.append((time.monotonic() + delay, next(order), cid))
+
+    while queue or attempts:
+        now = time.monotonic()
+        queue.sort()
+        while queue and n_running() < workers and queue[0][0] <= now:
+            _, _, cid = queue.pop(0)
+            launch(cid)
+        # Straggler re-issue: race a second attempt against any cell
+        # running far past the median finished wall time.
+        if len(finished_walls) >= 3 and n_running() < workers:
+            med = sorted(finished_walls)[len(finished_walls) // 2]
+            cutoff = straggler_factor * max(med, 0.1)
+            for cid, atts in list(attempts.items()):
+                if n_running() >= workers:
+                    break
+                if len(atts) == 1 and now - atts[0].started > cutoff:
+                    launch(cid)
+        if not by_conn:
+            if queue:  # every cell is sitting out a retry backoff
+                time.sleep(min(0.05, max(0.0, queue[0][0] - now)))
+            continue
+        for conn in conn_wait(list(by_conn), timeout=0.1):
+            att = by_conn.get(conn)
+            if att is None:
+                continue  # a sibling's win already tore this attempt down
+            try:
+                msg = conn.recv()
+            except (EOFError, OSError):
+                msg = ("err", "worker process died without sending a result")
+            if msg[0] == "ok":
+                if ffw.finish(att.cid, id(att)):
+                    finished_walls.append(time.monotonic() - att.started)
+                    cid = att.cid
+                    for other in list(attempts.get(cid, ())):
+                        kill(other)  # includes att itself
+                    finish(cid, spec_of[cid], msg[1])
+            else:
+                attempt_failed(att, msg[1])
+        if timeout is not None:
+            now = time.monotonic()
+            for atts in list(attempts.values()):
+                for att in list(atts):
+                    if now - att.started > timeout:
+                        attempt_failed(
+                            att, f"timeout: exceeded {timeout}s wall clock"
+                        )

@@ -14,6 +14,8 @@ tests/test_conformance.py (vcluster backend conformance).
 
 from __future__ import annotations
 
+import hashlib
+
 from repro.core import (
     FairScheduler,
     FIFOScheduler,
@@ -49,6 +51,7 @@ def run_trace(
     demand_indexed: bool = True,
     event_epsilon: float = 0.0,
     via_registry: bool = False,
+    faults=None,
 ) -> dict:
     """One FB-trace simulation; returns the comparable outcome summary.
 
@@ -66,6 +69,12 @@ def run_trace(
     ``repro.core.disciplines.build_scheduler`` too — the routing the
     scenario runner uses — which must be bit-identical to direct
     construction.
+
+    ``faults`` is an optional :class:`repro.core.FaultModel`; when
+    enabled, the summary grows ``"faults"`` (the injector's counters)
+    and ``"fault_trace_sha"`` (a content hash of the full ordered
+    failure-event trace) — the fault-determinism goldens compare those
+    alongside the completions.
     """
     cluster = fb_cluster(num_machines=num_machines)
     jobs, _ = fb_dataset(seed=seed, num_jobs=num_jobs)
@@ -95,9 +104,12 @@ def run_trace(
             sch = disciplines.build_scheduler(
                 "hfsp" if name == "hfsp-kill" else name, cluster, config=cfg
             )
-    res = Simulator(cluster, sch, jobs, event_epsilon=event_epsilon).run()
+    sim = Simulator(
+        cluster, sch, jobs, event_epsilon=event_epsilon, faults=faults
+    )
+    res = sim.run()
     st = res.stats
-    return {
+    out = {
         "completion": dict(res.completion),
         "locality": (res.locality_hits, res.locality_misses),
         "preemption": (st.suspensions, st.resumes, st.kills, st.waits),
@@ -105,6 +117,15 @@ def run_trace(
         "training": st.training_tasks,
         "passes": res.passes,
     }
+    if res.faults is not None:
+        out["faults"] = res.faults
+        # sha256 of the repr, not hash(): the trace tuples contain
+        # strings and must fingerprint identically across processes
+        # (PYTHONHASHSEED randomizes str hashes).
+        out["fault_trace_sha"] = hashlib.sha256(
+            repr(sim._injector.trace).encode()
+        ).hexdigest()
+    return out
 
 
 def assert_traces_equal(a: dict, b: dict) -> None:
@@ -120,3 +141,8 @@ def assert_traces_equal(a: dict, b: dict) -> None:
     assert not diffs, f"completion times differ (job: (a, b)): {diffs}"
     for key in ("locality", "preemption", "delay", "training", "passes"):
         assert a[key] == b[key], f"{key} differs: {a[key]} != {b[key]}"
+    for key in ("faults", "fault_trace_sha"):
+        if key in a or key in b:
+            assert a.get(key) == b.get(key), (
+                f"{key} differs: {a.get(key)} != {b.get(key)}"
+            )

@@ -16,6 +16,19 @@ os.environ.setdefault(
 import pytest  # noqa: E402
 
 
+def pytest_collection_modifyitems(config, items):
+    # Per-test wall-clock budget: the fault-injection and self-healing
+    # sweep suites spawn worker processes, and a hung child should fail
+    # its one test, not wedge the whole run.  Gated on the optional
+    # pytest-timeout plugin (requirements-dev.txt) being installed —
+    # without it the marker would be inert noise.
+    if not config.pluginmanager.hasplugin("timeout"):
+        return
+    for item in items:
+        if item.get_closest_marker("timeout") is None:
+            item.add_marker(pytest.mark.timeout(300))
+
+
 @pytest.fixture(scope="session")
 def rng():
     import jax

@@ -1,0 +1,173 @@
+"""Fault-injection subsystem: determinism goldens, inertness, robustness.
+
+The contracts pinned here (docs/faults.md):
+
+* **inertness** — with every fault rate zero the fault machinery is
+  provably absent: summaries (completions, stats, pass counts) are
+  bit-identical to a run with no FaultModel at all, and the result
+  carries no fault block;
+* **determinism goldens** — the same ``FaultModel`` seed produces an
+  identical ordered failure trace AND identical completions on rerun,
+  at each ``event_epsilon`` in {0, 0.5}, and across the numpy / jax /
+  auto virtual-cluster backends.  (eps=0 vs eps=0.5 schedules
+  legitimately differ — coalescing changes decision points by design,
+  see test_event_coalescing.py — so the golden is per-eps
+  rerun-reproducibility plus cross-backend identity, never cross-eps.);
+* **robustness** — every scheduler survives the all-knobs-hot model with
+  paranoid index cross-checks enabled on every fault path and zero lost
+  jobs: crash/recover, retry + backoff, blacklist + probation,
+  speculative re-execution, and estimation-sample loss all fire.
+"""
+
+import pytest
+
+from repro.core import FaultModel
+
+from conformance import (
+    DISCIPLINE_SCHEDULERS,
+    TRACE_SCHEDULERS,
+    assert_traces_equal,
+    run_trace,
+)
+
+ALL_SCHEDULERS = TRACE_SCHEDULERS + DISCIPLINE_SCHEDULERS
+
+#: Every fault class firing at once at quick-trace scale; the smoke
+#: numbers (hundreds of task failures, dozens of crashes/blacklists,
+#: speculation wins AND losses, sample losses) confirm each path is hot.
+HOT = dict(
+    seed=3,
+    machine_mtbf=4000.0,
+    machine_mttr=120.0,
+    task_fail_rate=0.08,
+    straggler_prob=0.1,
+    straggler_factor=4.0,
+    sample_loss_rate=0.3,
+    blacklist_threshold=2,
+    probation_s=100.0,
+)
+
+
+def hot_model(**over) -> FaultModel:
+    return FaultModel(**{**HOT, **over})
+
+
+def _backend_params():
+    out = ["numpy"]
+    try:
+        import jax  # noqa: F401
+
+        out.extend(["jax", "auto"])
+    except Exception:
+        out.extend(
+            pytest.param(b, marks=pytest.mark.skip(reason="no jax"))
+            for b in ("jax", "auto")
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Inertness: disabled faults leave the executor bit-identical
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_SCHEDULERS)
+def test_disabled_fault_model_is_bit_inert(name):
+    """A default (all-rates-zero) FaultModel — and an explicitly seeded
+    one — must not perturb a single bit of the schedule: same
+    completions, stats, and pass counts as no model at all, and no
+    fault block in the summary."""
+    ref = run_trace(name, 0)
+    assert "faults" not in ref
+    for fm in (FaultModel(), FaultModel(seed=99)):
+        assert not fm.enabled
+        got = run_trace(name, 0, faults=fm)
+        assert "faults" not in got
+        assert_traces_equal(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# Determinism goldens: same seed -> same failure trace + completions
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("eps", (0.0, 0.5))
+@pytest.mark.parametrize("name", ("hfsp", "hfsp-kill", "fifo", "psbs"))
+def test_fault_trace_reproducible_at_each_epsilon(name, eps):
+    """Golden: rerunning the same FaultModel seed reproduces the exact
+    ordered failure trace and completion schedule — at eps=0 AND inside
+    a coalescing window (faults must key their RNG off stable
+    identities, never off pass timing)."""
+    a = run_trace(name, 0, faults=hot_model(), event_epsilon=eps)
+    b = run_trace(name, 0, faults=hot_model(), event_epsilon=eps)
+    assert a["fault_trace_sha"] == b["fault_trace_sha"]
+    assert_traces_equal(a, b)
+    assert len(a["completion"]) == 30  # zero lost jobs
+
+
+@pytest.mark.parametrize("backend", _backend_params())
+def test_fault_trace_identical_across_backends(backend):
+    """Golden: the numpy / jax / auto virtual-cluster backends see the
+    identical failure trace and produce the identical schedule — fault
+    decisions derive from (seed, stream, key), never from backend
+    state."""
+    ref = run_trace("hfsp", 0, faults=hot_model(), vc_backend="numpy")
+    got = run_trace("hfsp", 0, faults=hot_model(), vc_backend=backend)
+    assert got["fault_trace_sha"] == ref["fault_trace_sha"]
+    assert_traces_equal(ref, got)
+
+
+@pytest.mark.parametrize("seed", (3, 11))
+def test_different_fault_seeds_diverge(seed):
+    """Sanity on the golden's teeth: a different FaultModel seed yields a
+    different failure trace (the sha comparison is not vacuous)."""
+    a = run_trace("hfsp", 0, faults=hot_model(seed=seed))
+    b = run_trace("hfsp", 0, faults=hot_model(seed=seed + 1))
+    assert a["fault_trace_sha"] != b["fault_trace_sha"]
+
+
+# ---------------------------------------------------------------------------
+# Robustness: every scheduler survives the hot model, paranoid-clean
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_SCHEDULERS)
+def test_all_schedulers_survive_hot_faults_paranoid(name):
+    """The all-knobs-hot model with paranoid demand-index cross-checks on
+    every fault path: 30/30 jobs complete, every fault class fired, and
+    speculation accounting balances (each launch resolves to exactly a
+    win or a loss by end of run)."""
+    got = run_trace(name, 0, faults=hot_model(), paranoid=True)
+    assert len(got["completion"]) == 30
+    f = got["faults"]
+    assert f["machine_crashes"] > 0
+    assert f["machine_recoveries"] > 0
+    assert f["task_failures"] > 0
+    assert f["retries"] > 0
+    assert f["blacklists"] > 0
+    assert f["sample_losses"] >= 0  # LAS/FIFO/FAIR never train
+    assert f["stragglers"] > 0
+    assert (
+        f["speculative_wins"] + f["speculative_losses"]
+        == f["speculative_launches"]
+    )
+    assert f["work_lost_s"] > 0.0
+
+
+def test_sample_loss_exercises_training_path():
+    """HFSP with heavy sample loss still finalizes every job's size
+    estimate and completes the trace (lose_sample re-requests or shrinks
+    the sample set, never stalls training)."""
+    got = run_trace(
+        "hfsp", 1,
+        faults=FaultModel(seed=5, sample_loss_rate=0.5, task_fail_rate=0.02),
+        paranoid=True,
+    )
+    assert len(got["completion"]) == 30
+    assert got["faults"]["sample_losses"] > 0
+
+
+def test_retry_budget_exhaustion_is_counted():
+    """A tiny retry budget under a high failure rate trips
+    retries_exhausted without losing jobs (the budget caps re-admission
+    pushes, not the task's right to eventually run)."""
+    got = run_trace(
+        "fifo", 0,
+        faults=FaultModel(seed=2, task_fail_rate=0.3, max_task_retries=1),
+    )
+    assert len(got["completion"]) == 30
+    assert got["faults"]["retries_exhausted"] > 0

@@ -10,8 +10,10 @@ import json
 import pytest
 
 from repro.scenarios import (
+    ClusterAxis,
     ResultStore,
     ScenarioSpec,
+    SchedulerAxis,
     SweepSpec,
     WorkloadAxis,
     export_trace,
@@ -26,6 +28,7 @@ from repro.scenarios import (
 )
 from repro.scenarios.runner import build_workload
 from repro.scenarios.spec import cell_id
+from repro.scenarios.sweep import _TEST_HOOK_ENV
 
 
 # ---------------------------------------------------------------------------
@@ -214,10 +217,11 @@ def test_sweep_store_tolerates_torn_trailing_line(tmp_path):
     assert len(resumed) == 3
 
 
-def test_parallel_sweep_failure_keeps_finished_cells(tmp_path):
-    """One failing cell must not discard its siblings' finished work:
-    the successes are stored, the failure is raised at the end, and a
-    resume recomputes only the failed cell."""
+def test_parallel_sweep_poison_cell_is_quarantined(tmp_path):
+    """A cell failing past its retry budget must not take the sweep down
+    with it: the siblings' finished work is stored, the poison cell
+    lands as a quarantine record, the sweep completes, and a resume
+    treats the quarantine record as done."""
     base = paper_fb_base().quick()
     sweep = SweepSpec(
         name="t", base=base,
@@ -229,10 +233,164 @@ def test_parallel_sweep_failure_keeps_finished_cells(tmp_path):
             }),
         ),
     )
+    bad_cid = next(
+        cid for cid, spec in sweep.expand() if spec.workload.kind == "trace"
+    )
     store = ResultStore(tmp_path / "store.jsonl")
-    with pytest.raises(RuntimeError, match="1 sweep cell"):
-        run_sweep(sweep, store=store, workers=2)
-    assert len(store.load()) == 2  # both good cells stored
+    results = run_sweep(
+        sweep, store=store, workers=2, max_retries=1, retry_backoff=0.05
+    )
+    assert len(results) == 3
+    assert results[bad_cid]["quarantined"]
+    assert results[bad_cid]["attempts"] == 2  # initial try + 1 retry
+    assert len(store.load()) == 3  # both good cells + the quarantine record
+    # matrix_report lists and excludes the poison cell.
+    matrix = matrix_report(results)
+    assert matrix["quarantined"] == [bad_cid]
+    assert bad_cid not in matrix["mean_sojourn_s"]
+    assert matrix["cells"] == 2
+    # Resume computes nothing: the quarantine record counts as done.
+    recomputed = []
+    resumed = run_sweep(
+        sweep, store=store, workers=2,
+        progress=lambda cid, res: recomputed.append(cid),
+    )
+    assert recomputed == []
+    assert resumed[bad_cid]["quarantined"]
+
+
+# ---------------------------------------------------------------------------
+# Self-healing sweep supervisor (hangs, poison cells, crash recovery)
+# ---------------------------------------------------------------------------
+def _tiny_sweep(n_cells: int = 3) -> SweepSpec:
+    """The smallest real sweep: n seeds x 6 jobs x 4 machines, FIFO.
+    Each cell runs in well under a second — the supervisor tests spawn
+    one process per attempt, so cell cost dominates test wall time."""
+    base = ScenarioSpec(
+        name="tiny",
+        workload=WorkloadAxis(kind="fb", num_jobs=6),
+        cluster=ClusterAxis(num_machines=4),
+        scheduler=SchedulerAxis(policy="fifo"),
+    )
+    return SweepSpec(
+        name="tiny", base=base,
+        grids=(
+            SweepSpec.grid(**{"workload.seed": tuple(range(n_cells))}),
+        ),
+    )
+
+
+def test_sweep_hanging_cell_times_out_and_recovers(tmp_path, monkeypatch):
+    """A cell hanging past the per-attempt wall-clock budget is killed
+    and re-issued; the retry (where the hook no longer hangs) succeeds
+    and the matrix completes with no quarantine."""
+    sweep = _tiny_sweep(3)
+    cids = [cid for cid, _ in sweep.expand()]
+    hook = {
+        "hang_once": [cids[1]],
+        "fail_always": [],
+        "state_dir": str(tmp_path),
+    }
+    hook_path = tmp_path / "hook.json"
+    hook_path.write_text(json.dumps(hook))
+    # Spawned attempt processes cannot see parent monkeypatches; the
+    # hook travels through the environment instead.
+    monkeypatch.setenv(_TEST_HOOK_ENV, str(hook_path))
+
+    store = ResultStore(tmp_path / "store.jsonl")
+    results = run_sweep(
+        sweep, store=store, workers=2,
+        timeout=5.0, max_retries=2, retry_backoff=0.05,
+    )
+    # The hook fired (first attempt hung) and the re-issue recovered.
+    assert (tmp_path / f"hung-{cids[1]}").exists()
+    assert set(results) == set(cids)
+    assert not any(r.get("quarantined") for r in results.values())
+    assert results[cids[1]]["jobs_completed"] == 6
+
+
+def test_sweep_worker_crash_is_retried(tmp_path, monkeypatch):
+    """An attempt process dying without a result (here: killed by the
+    hook raising) is a retryable failure, not a sweep abort."""
+    sweep = _tiny_sweep(2)
+    cids = [cid for cid, _ in sweep.expand()]
+    hook = {
+        "hang_once": [],
+        "fail_always": [cids[0]],
+        "state_dir": str(tmp_path),
+    }
+    hook_path = tmp_path / "hook.json"
+    hook_path.write_text(json.dumps(hook))
+    monkeypatch.setenv(_TEST_HOOK_ENV, str(hook_path))
+
+    results = run_sweep(
+        sweep, workers=2, timeout=30.0, max_retries=1, retry_backoff=0.05,
+    )
+    assert results[cids[0]]["quarantined"]
+    assert "fails" in results[cids[0]]["error"]
+    assert results[cids[1]]["jobs_completed"] == 6
+
+
+def test_inline_sweep_retries_and_quarantines(tmp_path):
+    """The inline (workers=0) path applies the same bounded-retry +
+    quarantine contract, minus timeouts (no process boundary to kill)."""
+    base = paper_fb_base().quick().override(**{
+        "workload.kind": "trace",
+        "workload.trace_path": str(tmp_path / "missing.jsonl"),
+    })
+    sweep = SweepSpec(
+        name="t", base=base,
+        grids=(SweepSpec.grid(**{"scheduler.policy": ("fifo",)}),),
+    )
+    results = run_sweep(sweep, workers=0, max_retries=2, retry_backoff=0.01)
+    (only,) = results.values()
+    assert only["quarantined"]
+    assert only["attempts"] == 3  # initial try + 2 retries
+
+
+def test_result_store_survives_truncation_at_every_byte(tmp_path):
+    """Crash-recovery property: truncate the store at EVERY byte offset;
+    load() must return exactly the records whose full line (including
+    newline) survived — finished cells preserved, torn tail dropped,
+    never an error or a phantom record."""
+    sweep = _tiny_sweep(3)
+    store = ResultStore(tmp_path / "store.jsonl")
+    originals = run_sweep(sweep, store=store, workers=0)
+    raw = store.path.read_bytes()
+    # A record survives once its full JSON content is on disk — losing
+    # only the trailing newline must not lose the record (append repairs
+    # the newline before writing the next one).
+    content_ends = [i for i, b in enumerate(raw) if b == ord("\n")]
+    order = [
+        json.loads(ln)["cell_id"]
+        for ln in raw.decode().splitlines()
+    ]
+    offsets_by_count: dict[int, int] = {}
+    for off in range(len(raw) + 1):
+        store.path.write_bytes(raw[:off])
+        loaded = store.load()
+        n_complete = sum(1 for e in content_ends if e <= off)
+        assert len(loaded) == n_complete, f"offset {off}"
+        assert [cid for cid, _ in loaded] == order[:n_complete]
+        offsets_by_count.setdefault(n_complete, off)
+
+    # Resume from one truncation point per surviving-record count: the
+    # sweep recomputes exactly the missing cells, nothing else.
+    for n_complete, off in sorted(offsets_by_count.items()):
+        store.path.write_bytes(raw[:off])
+        recomputed = []
+        resumed = run_sweep(
+            sweep, store=store, workers=0,
+            progress=lambda cid, res: recomputed.append(cid),
+        )
+        assert sorted(recomputed) == sorted(order[n_complete:])
+        for cid, res in originals.items():
+            assert (
+                resumed[cid]["completion_fingerprint"]
+                == res["completion_fingerprint"]
+            )
+        # The repaired store is whole again: every record loads.
+        assert len(store.load()) == len(order)
 
 
 def test_paper_fb_quick_hfsp_strictly_lowest():

@@ -220,6 +220,34 @@ class TestGangRuntime:
         assert len(rep["sojourn"]) == 2
         assert all(v is not None for v in rep["losses"].values())
 
+    def test_speculative_reexecution_on_spare_gang(self):
+        from repro.core import ClusterSpec, FIFOScheduler
+        from repro.runtime import GangRuntime, MLJob
+
+        cluster = ClusterSpec(num_machines=2, map_slots_per_machine=1,
+                              reduce_slots_per_machine=0)
+        jobs = [MLJob(0, get_smoke("olmo_1b"), total_steps=8,
+                      steps_per_quantum=2, arrival_time=0.0, name="slow")]
+        with tempfile.TemporaryDirectory() as d:
+            # straggler_factor ~0: every quantum past the 3rd counts as a
+            # straggler, forcing the speculative re-execution path.
+            rtm = GangRuntime(cluster, FIFOScheduler(cluster), jobs,
+                              CheckpointStore(d), straggler_factor=1e-6)
+            rep = rtm.run(max_wall_s=300)
+        st = rep["stats"]
+        assert 0 in rep["sojourn"]          # job completed despite racing
+        assert st["speculative"] >= 1
+        # Every race was decided: exactly one winner per speculation.
+        assert st["spec_wins"] + st["spec_losses"] == st["speculative"]
+        # Speculative copies bypass suspend/kill bookkeeping entirely.
+        assert st["offloads"] == 0 and st["kills"] == 0
+        spec_events = [e for e in rep["events"] if e[1] == "speculative"]
+        assert len(spec_events) == st["speculative"]
+        # The shadow ran on the spare gang, never the suspect's own.
+        for e in spec_events:
+            suspect, spare = e[2].split(" ")[1].split("->")
+            assert suspect != spare
+
     def test_failure_recovery(self):
         from repro.core import ClusterSpec, FIFOScheduler
         from repro.runtime import GangRuntime, MLJob
