@@ -174,6 +174,11 @@ def scenario_smoke() -> dict:
         out[f"{sweep.name}/{policy}"] = {
             "mean_sojourn_s": round(rep["mean_sojourn_s"], 2),
             "completion_fingerprint": rep["completion_fingerprint"],
+            # Tail/fairness trajectory (bench_gate.py gates these the
+            # same way as the mean: only when the baseline carries them).
+            "p99_sojourn_s": round(rep["tails"]["sojourn"]["p99"], 2),
+            "p999_sojourn_s": round(rep["tails"]["sojourn"]["p999"], 2),
+            "jain_slowdown": round(rep["fairness"]["jain_slowdown"], 4),
         }
     hfsp_lowest = means["hfsp"] < min(means["fair"], means["fifo"])
     print(

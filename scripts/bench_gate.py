@@ -19,11 +19,13 @@ when
   container CPU-placement noise is bimodal at that scale, while a real
   loss of the O(actionable) bound lands at >=1 ms (legacy walk: ~10 ms)
   and trips regardless, or
-* any scenario-smoke cell's mean sojourn (the ``scenarios`` block:
-  ``paper-fb@quick/<policy>``) worsened more than ``--sojourn-threshold``
-  (default 10%) versus the baseline — a *policy-level* regression gate:
-  a scheduler edit that silently degrades scheduling quality fails here
-  even if it runs faster, or
+* any scenario-smoke cell's mean / p99 / p999 sojourn (the ``scenarios``
+  block: ``paper-fb@quick/<policy>``) worsened more than
+  ``--sojourn-threshold`` (default 10%) versus the baseline, or its Jain
+  slowdown-fairness index dropped more than ``JAIN_DROP_LIMIT`` absolute
+  — a *policy-level* regression gate: a scheduler edit that silently
+  degrades scheduling quality (mean, tails, or fairness) fails here even
+  if it runs faster, or
 * any registry discipline's recorded decision latency at the same
   5000x1000 cell (``sched_disciplines_5000x1000``, Discipline API) lands
   above ``--discipline-factor`` (default 2x) times the hfsp latency —
@@ -54,6 +56,12 @@ import sys
 import time
 from pathlib import Path
 
+#: Max tolerated absolute drop of a cell's Jain slowdown-fairness index
+#: versus the baseline (the index lives in (0, 1]; the simulation is
+#: deterministic, so any drop is a policy change, but tiny shifts from
+#: re-tuned tie-breaks are expected PR-to-PR).
+JAIN_DROP_LIMIT = 0.05
+
 
 def sojourn_regressions(
     record: dict, baseline: dict, threshold: float
@@ -61,20 +69,38 @@ def sojourn_regressions(
     """Scenario-smoke cells whose mean sojourn worsened past threshold.
 
     Only cells present in BOTH records are compared (a renamed or newly
-    added scenario has no baseline to regress against).
+    added scenario has no baseline to regress against).  Besides the
+    mean, the tail/fairness keys recorded since PR 8 are gated under the
+    same only-when-both-records-carry-it policy: p99/p999 sojourn by the
+    same percentage threshold, and Jain's slowdown-fairness index by an
+    absolute drop bound (it lives in (0, 1], so percentages mislead).
     """
     out = []
     new_s, old_s = record.get("scenarios", {}), baseline.get("scenarios", {})
+    gated = (
+        ("mean_sojourn_s", "mean sojourn"),
+        ("p99_sojourn_s", "p99 sojourn"),
+        ("p999_sojourn_s", "p999 sojourn"),
+    )
     for cell in sorted(set(new_s) & set(old_s)):
-        new_m = new_s[cell].get("mean_sojourn_s")
-        old_m = old_s[cell].get("mean_sojourn_s")
-        if new_m is None or old_m is None:
-            continue  # cell predates (or dropped) the gated key
-        if old_m > 0 and new_m > old_m * (1.0 + threshold):
-            out.append(
-                f"{cell}: mean sojourn {old_m:.1f}s -> {new_m:.1f}s "
-                f"({new_m / old_m - 1.0:+.1%})"
-            )
+        for key, label in gated:
+            new_m = new_s[cell].get(key)
+            old_m = old_s[cell].get(key)
+            if new_m is None or old_m is None:
+                continue  # cell predates (or dropped) the gated key
+            if old_m > 0 and new_m > old_m * (1.0 + threshold):
+                out.append(
+                    f"{cell}: {label} {old_m:.1f}s -> {new_m:.1f}s "
+                    f"({new_m / old_m - 1.0:+.1%})"
+                )
+        new_j = new_s[cell].get("jain_slowdown")
+        old_j = old_s[cell].get("jain_slowdown")
+        if new_j is not None and old_j is not None:
+            if new_j < old_j - JAIN_DROP_LIMIT:
+                out.append(
+                    f"{cell}: Jain slowdown-fairness {old_j:.4f} -> "
+                    f"{new_j:.4f} (drop > {JAIN_DROP_LIMIT})"
+                )
     return out
 
 

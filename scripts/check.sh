@@ -52,4 +52,11 @@ PY
   echo
   echo "== paper-faults@quick goodput/sojourn =="
   python scripts/faults_summary.py --workers 4
+
+  echo
+  echo "== live service smoke (twin fingerprint + p99 decision latency) =="
+  # Master + 2 in-process workers, 50-job burst, one worker killed
+  # mid-workload; fails if the journal's Simulator replay diverges from
+  # the live run or p99 decision latency blows past the bound.
+  python scripts/service_smoke.py --jobs 50 --p99-ms 250
 fi

@@ -1,0 +1,173 @@
+#!/usr/bin/env python
+"""Live-service smoke: master + 2 in-process workers + a 50-job burst,
+gated on the twin property and decision latency.
+
+Boots a real asyncio master (admission control on, checkpointing on),
+connects two worker agents, fires a 50-job burst from 4 users, kills
+one worker mid-workload (exercising the journaled crash path), waits
+for the engine to drain, then:
+
+* replays the journal through the offline Simulator and **fails** if
+  the twin's completion fingerprint differs from the live run's;
+* **fails** if p99 decision latency (wall ms per work-doing engine
+  advance) exceeds ``--p99-ms`` (default 250 ms — generous; the quick
+  cells run well under 10 ms, the bound exists to catch pathological
+  O(n) blowups in the live path, not to benchmark the host).
+
+Exit 0 = both gates hold.  Run by scripts/check.sh as the service
+smoke stage; standalone:
+
+    PYTHONPATH=src python scripts/service_smoke.py --jobs 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core.types import ClusterSpec
+from repro.service import (
+    AdmissionConfig,
+    LiveEngine,
+    Master,
+    MasterConfig,
+    WorkerAgent,
+    live_fingerprint,
+    replay_journal,
+)
+from repro.service.protocol import ServiceClient
+
+TIME_SCALE = 1000.0
+
+
+def mk_job(i: int) -> dict:
+    return {
+        "name": f"smoke-{i}",
+        "map": [[30.0 + 9.0 * ((i + k) % 7), [], 0]
+                for k in range(2 + i % 4)],
+        "reduce": [[20.0, [], 0]] if i % 3 else [],
+        "weight": 1.0,
+        "reduce_slowstart": 1.0,
+    }
+
+
+async def run(args, tmp: Path) -> dict:
+    journal = tmp / "smoke.jsonl"
+    engine = LiveEngine.create(
+        journal,
+        args.policy,
+        ClusterSpec(
+            num_machines=2, map_slots_per_machine=2,
+            reduce_slots_per_machine=1,
+        ),
+        time_scale=TIME_SCALE,
+    )
+    master = Master(engine, MasterConfig(
+        pace_wall=0.005,
+        worker_dead_wall=0.15,
+        checkpoint_path=str(tmp / "smoke-ck.json"),
+        admission=AdmissionConfig(max_live_jobs=32),
+    ))
+    await master.start()
+    workers = []
+    for m in range(2):
+        w = WorkerAgent("127.0.0.1", master.port, m, heartbeat_wall=0.03)
+        await w.start()
+        workers.append(w)
+
+    loop = asyncio.get_running_loop()
+
+    def burst():
+        with ServiceClient("127.0.0.1", master.port) as c:
+            for i in range(args.jobs):
+                r = c.call({
+                    "op": "submit", "user": f"user-{i % 4}",
+                    "tag": f"smoke-{i}", "job": mk_job(i),
+                })
+                assert r["ok"], r
+
+    await loop.run_in_executor(None, burst)
+
+    # Kill one worker mid-workload: the master journals the crash and
+    # the fault machinery reschedules its tasks.
+    while len(engine.sim.result.completion) < args.jobs // 10:
+        await asyncio.sleep(0.01)
+    await workers[1].die()
+
+    t0 = time.monotonic()
+    while len(engine.sim.result.completion) < args.jobs:
+        if time.monotonic() - t0 > args.timeout:
+            raise SystemExit(
+                f"smoke timed out: "
+                f"{len(engine.sim.result.completion)}/{args.jobs} done"
+            )
+        await asyncio.sleep(0.02)
+
+    def status():
+        with ServiceClient("127.0.0.1", master.port) as c:
+            return c.call({"op": "status"})
+
+    snap = await loop.run_in_executor(None, status)
+    fp_live = live_fingerprint(engine.sim)
+    await master.stop()
+    for w in workers:
+        await w.die()
+    return {"snap": snap, "fp_live": fp_live, "journal": journal}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=50)
+    ap.add_argument("--policy", default="hfsp")
+    ap.add_argument("--p99-ms", type=float, default=250.0)
+    ap.add_argument("--timeout", type=float, default=60.0)
+    args = ap.parse_args(argv)
+
+    with tempfile.TemporaryDirectory(prefix="service-smoke-") as d:
+        out = asyncio.run(run(args, Path(d)))
+        twin = replay_journal(out["journal"])
+        fp_twin = live_fingerprint(twin)
+
+    snap = out["snap"]
+    lat = snap["decision_latency_ms"]
+    crashes = snap["jobs"]["worker_crashes"]
+    print(json.dumps({
+        "jobs_completed": snap["jobs"]["completed"],
+        "worker_crashes": crashes,
+        "fingerprint_live": out["fp_live"],
+        "fingerprint_twin": fp_twin,
+        "decision_latency_ms": {
+            k: round(lat[k], 3) for k in ("p50", "p95", "p99")
+            if k in lat
+        },
+        "goodput": round(snap["goodput"], 4),
+        "jain_slowdown": round(snap["fairness"]["jain_slowdown"], 4),
+    }, indent=2, sort_keys=True))
+
+    ok = True
+    if fp_twin != out["fp_live"]:
+        print("FAIL: twin replay fingerprint differs from live run",
+              file=sys.stderr)
+        ok = False
+    if crashes < 1:
+        print("FAIL: worker death was never declared", file=sys.stderr)
+        ok = False
+    if lat.get("p99", 0.0) > args.p99_ms:
+        print(
+            f"FAIL: p99 decision latency {lat['p99']:.1f}ms > "
+            f"{args.p99_ms}ms", file=sys.stderr,
+        )
+        ok = False
+    if ok:
+        print("service smoke OK: live == twin, "
+              f"p99 decision latency {lat.get('p99', 0.0):.2f}ms")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

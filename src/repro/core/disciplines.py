@@ -273,6 +273,20 @@ class PreemptionPolicy:
     def may_preempt(self, engine, js, phase: Phase, now: float) -> bool:
         return True
 
+    def on_pass(
+        self, engine, phase: Phase, now: float, have_free: bool
+    ) -> None:
+        """Once per (phase, scheduling pass), right after the engine read
+        the free-slot state and before any job is visited — the place to
+        prefetch whatever ``may_preempt`` will consult this pass (the
+        batched rank-stability refresh).  Must be decision-neutral: only
+        caches may change.  Default: no-op."""
+
+    def on_estimate(self, engine, job_id: int, phase: Phase) -> None:
+        """A job's phase-size estimate was just revised (sample
+        observation landed).  Lets a policy mark cached verdicts dirty
+        without scanning live jobs each pass.  Default: no-op."""
+
     def forget(self, job_id: int) -> None:
         """Evict any per-job state (called by the engine when the job
         completes)."""
@@ -303,6 +317,13 @@ class StabilityHysteresis(PreemptionPolicy):
     def __post_init__(self) -> None:
         # (job, phase.value) -> (observation count, spread, vetoed).
         self._cache: dict[tuple[int, str], tuple[int, int, bool]] = {}
+        # phase.value -> jobs whose estimate moved since their verdict
+        # was cached — the only candidates the on_pass prefetch must
+        # re-price, so the prefetch costs O(estimate revisions), never
+        # O(live jobs).
+        self._dirty: dict[str, dict[int, None]] = {
+            Phase.MAP.value: {}, Phase.REDUCE.value: {}
+        }
 
     def may_preempt(self, engine, js, phase, now):
         jid = js.spec.job_id
@@ -320,9 +341,54 @@ class StabilityHysteresis(PreemptionPolicy):
         engine.note_rank_stability(spread, vetoed)
         return not vetoed
 
+    def on_estimate(self, engine, job_id, phase):
+        if engine.training.is_training(job_id, phase):
+            self._dirty[phase.value][job_id] = None
+
+    def on_pass(self, engine, phase, now, have_free):
+        """Batched verdict refresh: on a slot-starved pass (the only
+        kind whose job walk can reach ``may_preempt``), drain the
+        dirty set — jobs whose estimate was revised since their cached
+        verdict (``on_estimate``) — and re-price every genuinely stale
+        one through ONE ``rank_stability_batch`` projection.
+        Per-scenario results are independent, so each verdict is
+        bit-identical to the lazy per-job path — which still covers
+        jobs the dirty set misses (first consult of a fresh job, or a
+        drain below the 2-job batch threshold: a single job batches
+        nothing).  Cost is O(revisions since last drain), never
+        O(live jobs)."""
+        if have_free:
+            return
+        dirty = self._dirty[phase.value]
+        if len(dirty) < 2:
+            return
+        tr = engine.training
+        stale: list[tuple[int, int]] = []
+        for jid in dirty:
+            if not tr.is_training(jid, phase):
+                continue
+            n_obs = tr.n_observations(jid, phase)
+            hit = self._cache.get((jid, phase.value))
+            if hit is None or hit[0] != n_obs:
+                stale.append((jid, n_obs))
+        dirty.clear()
+        if len(stale) < 2:
+            return
+        positions = engine.rank_stability_batch(
+            phase, [jid for jid, _ in stale], now
+        )
+        for jid, n_obs in stale:
+            pos = positions.get(jid, [])
+            spread = (max(pos) - min(pos)) if pos else 0
+            self._cache[(jid, phase.value)] = (
+                n_obs, spread, spread > self.max_spread
+            )
+
     def forget(self, job_id: int) -> None:
         self._cache.pop((job_id, Phase.MAP.value), None)
         self._cache.pop((job_id, Phase.REDUCE.value), None)
+        for d in self._dirty.values():
+            d.pop(job_id, None)
 
 
 # ---------------------------------------------------------------------------

@@ -83,6 +83,13 @@ class FaultModel:
     # A speculative copy is only worth launching if the straggler still
     # has at least this much nominal work left (seconds).
     speculation_min_remaining: float = 1.0
+    # Externally-driven faults: keep the injector armed even with every
+    # stochastic rate at zero, so scripted crash/recover events
+    # (Simulator.inject_fault — the live service maps worker death and
+    # rejoin onto these) route through the same failure/readmission
+    # machinery.  No events are *drawn*: an external-only model seeds no
+    # outages and injects no task failures.
+    external: bool = False
 
     @property
     def enabled(self) -> bool:
@@ -91,6 +98,7 @@ class FaultModel:
             or self.task_fail_rate > 0.0
             or self.straggler_prob > 0.0
             or self.sample_loss_rate > 0.0
+            or self.external
         )
 
 

@@ -302,6 +302,7 @@ class HFSPScheduler(Scheduler):
                 js.est_size[phase] = new_est
                 if self.rank.uses_vcluster:
                     self.vc[phase].set_size(job_id, new_est)
+                self.preemption_policy.on_estimate(self, job_id, phase)
         if js.n_unfinished(phase) == 0 and self.rank.uses_vcluster:
             self.vc[phase].remove_job(job_id)
         # NOTE: real task completions do NOT shrink the virtual cap — the
@@ -331,6 +332,7 @@ class HFSPScheduler(Scheduler):
             js.est_size[phase] = new_est
             if self.rank.uses_vcluster:
                 self.vc[phase].set_size(job_id, new_est)
+            self.preemption_policy.on_estimate(self, job_id, phase)
             self._rank_dirty(phase)
 
     def on_job_complete(self, job_id: int, now: float) -> None:
@@ -541,6 +543,48 @@ class HFSPScheduler(Scheduler):
         fins = vc.projected_finish_batch(scenarios, now, as_sizes=True)
         return [vc._order_from_fin(fin).index(job_id) for fin in fins]
 
+    def rank_stability_batch(
+        self, phase: Phase, job_ids: list[int], now: float
+    ) -> dict[int, list[int]]:
+        """Rank-stability positions for MANY jobs in ONE batched
+        projection.
+
+        Concatenates every job's candidate-size scenarios (exactly the
+        per-job :meth:`rank_stability` scenarios, in the same per-job
+        order) into a single ``projected_finish_batch`` call, then slices
+        the results back per job.  Scenario rows are independent, so each
+        job's positions are bit-identical to its per-job call — this is
+        the epsilon-window fusion: after a coalesced event window many
+        in-training jobs need re-pricing at once, and one batched
+        dispatch replaces one per job (the ROADMAP "re-project whole
+        windows through one projected_finish_batch call" item).
+        """
+        self._advance(now)
+        vc = self.vc[phase]
+        spans: list[tuple[int, int, int]] = []  # (job_id, start, count)
+        scenarios: list[dict[int, float]] = []
+        for jid in job_ids:
+            js = self.jobs.get(jid)
+            if js is None or jid not in vc:
+                spans.append((jid, len(scenarios), 0))
+                continue
+            sizes = self.training.candidate_sizes(js, phase)
+            spans.append((jid, len(scenarios), len(sizes)))
+            scenarios.extend({jid: s} for s in sizes)
+        if not scenarios:
+            return {jid: [] for jid, _, _ in spans}
+        self.stats.rank_stability_batched += sum(
+            1 for _, _, n in spans if n
+        )
+        fins = vc.projected_finish_batch(scenarios, now, as_sizes=True)
+        out: dict[int, list[int]] = {}
+        for jid, start, count in spans:
+            out[jid] = [
+                vc._order_from_fin(fin).index(jid)
+                for fin in fins[start:start + count]
+            ]
+        return out
+
     def note_rank_stability(self, spread: int, vetoed: bool) -> None:
         """Record one preemption-hysteresis consultation (called by
         :class:`repro.core.disciplines.StabilityHysteresis`); surfaces
@@ -566,6 +610,7 @@ class HFSPScheduler(Scheduler):
             "aging_policy": self.aging.name,
             "rank_stability_checks": self.stats.rank_stability_checks,
             "rank_stability_vetoes": self.stats.rank_stability_vetoes,
+            "rank_stability_batched": self.stats.rank_stability_batched,
             "max_rank_spread": self._max_rank_spread,
             "late_job_bumps": self.stats.late_job_bumps,
         }
@@ -605,6 +650,12 @@ class HFSPScheduler(Scheduler):
         # run before the rank order is read so they shape this pass.
         self.aging.on_pass(self, phase, now)
         free = list(view.free_slots(phase))
+        # Preemption-policy pass hook: when the pass starts slot-starved,
+        # StabilityHysteresis re-prices every stale in-training verdict
+        # through ONE rank_stability_batch projection here, so the
+        # may_preempt consultations below are pure cache hits (identical
+        # verdicts — vcluster state is static within a pass).
+        self.preemption_policy.on_pass(self, phase, now, bool(free))
         # Jobs in the discipline's rank order (HFSP: ascending projected
         # PS finish time, Sect. 3.1; SRPT: estimated remaining; LAS:
         # attained service).  Positions come from the policy's order

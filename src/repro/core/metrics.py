@@ -76,6 +76,50 @@ def ecdf_quantiles(
     }
 
 
+#: Tail percentiles for the tails report block (99.9 renders as "p999").
+TAIL_PERCENTILES = (99, 99.9)
+
+
+def tail_quantiles(
+    values: list[float],
+    percentiles: tuple[float, ...] = TAIL_PERCENTILES,
+) -> dict[str, float]:
+    """Extreme-tail quantiles: {"p99": ..., "p999": ...}.
+
+    Labels drop the decimal point (99.9 -> "p999") so the report keys
+    stay valid identifiers.  The ECDF quantiles stop at p95/p99; these
+    are the tails the service telemetry and the bench gate watch.
+    """
+    labels = [
+        "p" + (f"{p:g}".replace(".", "")) for p in percentiles
+    ]
+    if not values:
+        return {lab: 0.0 for lab in labels}
+    a = np.asarray(values, dtype=np.float64)
+    return {
+        lab: float(np.percentile(a, p))
+        for lab, p in zip(labels, percentiles)
+    }
+
+
+def jain_index(values: list[float]) -> float:
+    """Jain's fairness index: (sum x)^2 / (n * sum x^2), in (0, 1].
+
+    1.0 means every job got exactly the same value (perfect fairness);
+    1/n means one job got everything.  Computed over per-job slowdowns
+    it is the standard fairness-of-slowdown measure for size-based
+    disciplines (the "is HFSP unfair to large jobs?" question of
+    Sect. 4.2).  Empty or all-zero input returns 1.0 (trivially fair).
+    """
+    if not values:
+        return 1.0
+    a = np.asarray(values, dtype=np.float64)
+    denom = len(a) * float((a * a).sum())
+    if denom <= 0:
+        return 1.0
+    return float(a.sum()) ** 2 / denom
+
+
 def slowdowns(
     result: SimResult, size_of: dict[int, float]
 ) -> dict[int, float]:

@@ -332,6 +332,18 @@ class Scheduler(abc.ABC):
     def on_tick(self, now: float) -> None:
         """Periodic heartbeat (executors call this every few sim-seconds)."""
 
+    def on_wall_tick(self, wall_now: float, now: float) -> None:
+        """Wall-clock tick seam for the live service (repro.service).
+
+        The live master's pacer calls this once per real-time heartbeat
+        with both clocks: ``wall_now`` is wall seconds, ``now`` is the
+        mapped simulation time the engine has been advanced to.  Offline
+        executors never call it.  Default: no-op — disciplines that want
+        wall-time-based behaviour (telemetry snapshots, watchdog
+        self-checks) override it; everything that affects *scheduling*
+        must key off simulation time so the replay twin stays
+        deterministic."""
+
     # -- run-state engine hooks (executor -> scheduler) ----------------------
     # Executors call these right after physically applying each action so
     # the indexes mirror the cluster without per-pass rebuilds.  Each hook

@@ -75,6 +75,45 @@ from repro.core.types import (
 _ARRIVAL, _COMPLETE, _PROGRESS, _TICK, _FAULT = 0, 1, 2, 3, 4
 
 
+def auto_event_epsilon(
+    arrivals: list[float], heartbeat: float = 3.0
+) -> float:
+    """Pick a coalescing window width from observed arrival burstiness.
+
+    Burstiness is measured as the coefficient of variation (CV) of the
+    inter-arrival gaps.  CV <= 1 (Poisson or smoother): return 0 — the
+    stream has no bursts, so a window would only delay decisions without
+    cutting pass counts.  CV > 1: return the *median* gap — in a bursty
+    stream the median sits inside the bursts (most gaps are tiny), so a
+    median-wide window merges each burst into one scheduling pass while
+    the inter-burst gaps, far above the median, still get their own.
+    Capped at one ``heartbeat`` so no decision is ever deferred longer
+    than the executor's own tick, and 0 for fewer than 3 arrivals (one
+    gap is not a distribution).
+
+    Pure and deterministic: scenario cells resolve
+    ``event_epsilon="auto"`` through this at build time, and the live
+    service's epsilon controller re-evaluates it over the observed
+    arrival history (journaling each retune so the twin replay uses the
+    recorded value, never a recomputation).
+    """
+    ts = sorted(arrivals)
+    if len(ts) < 3:
+        return 0.0
+    gaps = [b - a for a, b in zip(ts, ts[1:])]
+    mean = sum(gaps) / len(gaps)
+    if mean <= 0.0:
+        # Every arrival simultaneous: any window merges them; one
+        # heartbeat is the largest we ever allow.
+        return float(heartbeat)
+    var = sum((g - mean) ** 2 for g in gaps) / len(gaps)
+    cv = (var ** 0.5) / mean
+    if cv <= 1.0:
+        return 0.0
+    med = sorted(gaps)[len(gaps) // 2]
+    return float(min(med, heartbeat))
+
+
 @dataclass
 class SimConfig:
     """Executor knobs, bundled so scenario specs and benchmarks can pass
@@ -87,8 +126,10 @@ class SimConfig:
     progress_delta: float | None = None
     #: Epsilon-window event coalescing (seconds): 0 = a pass per event
     #: (legacy, bit-identical); eps > 0 = one pass per event window (see
-    #: module docstring for the determinism contract).
-    event_epsilon: float = 0.0
+    #: module docstring for the determinism contract); the string
+    #: ``"auto"`` = derive the width from the workload's arrival
+    #: burstiness at construction time (:func:`auto_event_epsilon`).
+    event_epsilon: float | str = 0.0
     #: Deterministic fault injection (repro.core.faults / docs/faults.md);
     #: None or an all-zero-rate model leaves the fault layer entirely off
     #: — zero-fault runs are bit-identical to pre-fault builds.
@@ -191,6 +232,15 @@ class Simulator:
         self.track_timeline = config.track_timeline
         progress_delta = config.progress_delta
         event_epsilon = config.event_epsilon
+        if isinstance(event_epsilon, str):
+            if event_epsilon != "auto":
+                raise ValueError(
+                    f"event_epsilon must be a number or 'auto', got "
+                    f"{event_epsilon!r}"
+                )
+            event_epsilon = auto_event_epsilon(
+                [j.arrival_time for j in jobs], config.heartbeat
+            )
         if event_epsilon < 0:
             raise ValueError(f"event_epsilon must be >= 0, got {event_epsilon}")
         self.event_epsilon = float(event_epsilon)
@@ -260,6 +310,14 @@ class Simulator:
         # workload is drained (no arrivals left, no live jobs), which
         # keeps crash/recover regeneration from inflating the makespan.
         self._arrivals_left = len(self._jobs)
+        # -- live-service seam (repro.service; None = offline replay) --
+        # Observer callbacks, called AFTER the engine applied the state
+        # change (they must not mutate engine state, so the listener-less
+        # twin replay stays bit-identical): action_listener(action, now)
+        # after every applied scheduling action, completion_listener(
+        # job_id, now) on every job completion.
+        self.action_listener = None
+        self.completion_listener = None
 
     # ------------------------------------------------------------------
     # ClusterView protocol
@@ -403,6 +461,73 @@ class Simulator:
             self.scheduler.on_task_killed(att)
         else:  # pragma: no cover - defensive
             raise TypeError(f"unknown action {action!r}")
+        if self.action_listener is not None:
+            self.action_listener(action, now)
+
+    # ------------------------------------------------------------------
+    # Live-service injection seam (repro.service).  Everything here is a
+    # thin, deterministic wrapper over the ordinary event heap: a live
+    # session and its journal replay push the exact same events in the
+    # exact same order, so the twin's schedule is bit-identical.
+    # ------------------------------------------------------------------
+    def submit(self, spec: JobSpec) -> None:
+        """Inject a dynamic job arrival (live master admission path).
+
+        The job must arrive at or after the current simulation time and
+        must not reuse a known job id.  Jobs passed to the constructor
+        are seeded by ``run()``; ``submit`` is for arrivals that become
+        known only while the simulation is underway.
+        """
+        if spec.arrival_time < self._now:
+            raise ValueError(
+                f"job {spec.job_id} arrival {spec.arrival_time} is in "
+                f"the past (now={self._now})"
+            )
+        if spec.job_id in self.scheduler.jobs:
+            raise ValueError(f"duplicate job id {spec.job_id}")
+        self._arrivals_left += 1
+        self._push(spec.arrival_time, _ARRIVAL, spec)
+
+    def inject_fault(self, t: float, kind: str, machine: int) -> None:
+        """Schedule a *scripted* machine fault at simulation time ``t``.
+
+        ``kind`` is ``"crash"`` or ``"recover"``.  Unlike the stochastic
+        crash/recover chain, scripted events do not regenerate (a
+        scripted crash schedules no recovery and vice versa) and are
+        never moot — the live service maps worker death onto ``crash``
+        and worker rejoin onto ``recover``, and those must take effect
+        even on an idle cluster.  Requires an armed fault layer
+        (``FaultModel(external=True)`` suffices).
+        """
+        if self._injector is None:
+            raise RuntimeError(
+                "scripted faults need an armed fault layer — construct "
+                "with SimConfig(faults=FaultModel(external=True, ...))"
+            )
+        if kind not in ("crash", "recover"):
+            raise ValueError(f"unknown scripted fault kind {kind!r}")
+        if t < self._now:
+            raise ValueError(f"scripted fault at {t} is in the past "
+                             f"(now={self._now})")
+        self._push(t, _FAULT, (f"x{kind}", machine))
+
+    def set_event_epsilon(self, eps: float) -> None:
+        """Retune the coalescing window width mid-run (live service:
+        the auto-epsilon controller tracks arrival burstiness).
+
+        Only legal while no window is open — ``run(until=...)`` always
+        flushes the open window before returning, so the live loop can
+        retune after any advance.  The change is journaled as an event
+        so the twin replay retunes at the identical point.
+        """
+        if eps < 0:
+            raise ValueError(f"event_epsilon must be >= 0, got {eps}")
+        if self._window_end is not None:  # pragma: no cover - defensive
+            raise RuntimeError(
+                "cannot retune event_epsilon with a coalescing window "
+                "open; call run(until=now) first"
+            )
+        self.event_epsilon = float(eps)
 
     # ------------------------------------------------------------------
     # Event processing
@@ -570,6 +695,10 @@ class Simulator:
         event may advance the clock: a moot fault event must not inflate
         the makespan or regenerate further machine churn."""
         kind = payload[0]
+        if kind in ("xcrash", "xrecover"):
+            # Scripted (live-service) events never go stale: a worker
+            # death must take the machine down even on an idle cluster.
+            return False
         if kind in ("crash", "recover", "probation"):
             return self._arrivals_left == 0 and not self.scheduler._live
         if kind in ("taskfail", "spec_check"):
@@ -593,6 +722,10 @@ class Simulator:
             self._on_machine_crash(payload[1])
         elif kind == "recover":
             self._on_machine_recover(payload[1])
+        elif kind == "xcrash":
+            self._on_machine_crash(payload[1], chain=False)
+        elif kind == "xrecover":
+            self._on_machine_recover(payload[1], chain=False)
         elif kind == "probation":
             self._on_probation_end(payload[1])
         elif kind == "taskfail":
@@ -606,7 +739,7 @@ class Simulator:
         else:  # pragma: no cover - defensive
             raise ValueError(f"unknown fault event {kind!r}")
 
-    def _on_machine_crash(self, m: int) -> None:
+    def _on_machine_crash(self, m: int, chain: bool = True) -> None:
         inj = self._injector
         now = self._now
         was_up = m not in self._machine_down
@@ -632,20 +765,27 @@ class Simulator:
                 self._cancel_shadow(key)
         if was_up:
             self.scheduler.on_machine_crashed(m)
-        self._push(now + inj.next_recover_delay(m), _FAULT, ("recover", m))
+        # Scripted crashes (chain=False) schedule no recovery: the
+        # machine stays down until an explicit scripted recover (live
+        # service: until the worker rejoins).
+        if chain:
+            self._push(now + inj.next_recover_delay(m), _FAULT, ("recover", m))
 
-    def _on_machine_recover(self, m: int) -> None:
+    def _on_machine_recover(self, m: int, chain: bool = True) -> None:
         inj = self._injector
         if self._machine_down.get(m) == "crash":
             del self._machine_down[m]
             inj.stats["machine_recoveries"] += 1
             inj.record(self._now, "recover", m)
             self.scheduler.on_machine_recovered(m)
-        # Chain the next outage regardless: the crash/recover cadence is
-        # a property of the machine, not of its blacklist state.
-        self._push(
-            self._now + inj.next_outage_delay(m), _FAULT, ("crash", m)
-        )
+        # Chain the next outage regardless of blacklist state: the
+        # crash/recover cadence is a property of the machine, not of its
+        # blacklist state.  Scripted recoveries (chain=False) regenerate
+        # nothing.
+        if chain:
+            self._push(
+                self._now + inj.next_outage_delay(m), _FAULT, ("crash", m)
+            )
 
     def _on_probation_end(self, m: int) -> None:
         inj = self._injector
@@ -753,6 +893,8 @@ class Simulator:
         self.result.locality_hits += js.locality_hits
         self.result.locality_misses += js.locality_misses
         self.scheduler.on_job_complete(js.spec.job_id, self._now)
+        if self.completion_listener is not None:
+            self.completion_listener(js.spec.job_id, self._now)
 
     def _live_jobs_exist(self) -> bool:
         return bool(self.scheduler._live)

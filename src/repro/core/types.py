@@ -394,4 +394,8 @@ class SchedulerStats:
     # virtual re-injections (PSBSLateAging).
     rank_stability_checks: int = 0
     rank_stability_vetoes: int = 0
+    #: Jobs whose stability verdict was refreshed through the fused
+    #: per-pass ``rank_stability_batch`` projection (vs one batched
+    #: projection per job on the lazy path).
+    rank_stability_batched: int = 0
     late_job_bumps: int = 0

@@ -15,9 +15,11 @@ from repro.core.simulator import SimResult
 from repro.core.metrics import (
     SojournSummary,
     ecdf_quantiles,
+    jain_index,
     per_class_sojourns,
     per_job_delta,
     slowdowns,
+    tail_quantiles,
 )
 from repro.scenarios.spec import ScenarioSpec
 
@@ -89,6 +91,20 @@ def scenario_report(
         "slowdown": {
             **_summary_dict(SojournSummary.of(list(slow.values()))),
             "ecdf": ecdf_quantiles(list(slow.values())),
+        },
+        # Extreme tails + Jain's fairness index (ROADMAP "fairness and
+        # tails"): p99/p999 of the sojourn and per-job-slowdown
+        # distributions, and the fairness index over slowdowns (1.0 =
+        # every job slowed equally; 1/n = one job absorbed all the
+        # queueing).  These double as the live service's telemetry
+        # counters (src/repro/service/telemetry.py).
+        "tails": {
+            "sojourn": tail_quantiles(list(soj.values())),
+            "slowdown": tail_quantiles(list(slow.values())),
+        },
+        "fairness": {
+            "jain_sojourn": jain_index(list(soj.values())),
+            "jain_slowdown": jain_index(list(slow.values())),
         },
         "locality_fraction": res.locality_fraction,
         "completion_fingerprint": completion_fingerprint(res),

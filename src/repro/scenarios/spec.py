@@ -173,8 +173,11 @@ class ScenarioSpec:
     #: event, bit-identical to the legacy loop — see
     #: repro.core.simulator.SimConfig.event_epsilon).  A spec axis so
     #: sweeps can report the sojourn-vs-scheduler-overhead tradeoff per
-    #: cell (the ``paper-fb-eps`` preset).
-    event_epsilon: float = 0.0
+    #: cell (the ``paper-fb-eps`` preset).  The string ``"auto"`` derives
+    #: the width from the materialized workload's arrival burstiness
+    #: (repro.core.simulator.auto_event_epsilon) — still deterministic
+    #: per cell, since the workload is a pure function of the spec.
+    event_epsilon: float | str = 0.0
     #: Fault injection (machine churn, task failures, stragglers, sample
     #: loss — see repro.core.faults and the ``paper-faults`` preset).
     faults: FaultAxis = field(default_factory=FaultAxis)

@@ -81,7 +81,18 @@ def load_trace(
                 f"{path}: trace version {header.get('version')!r} != "
                 f"supported {TRACE_VERSION}"
             )
-        jobs = [_job_from_record(json.loads(ln)) for ln in f if ln.strip()]
+        jobs = []
+        for ln in f:
+            if not ln.strip():
+                continue
+            d = json.loads(ln)
+            if "event" in d:
+                # Live-session journal entry (repro.service.journal):
+                # advance barriers, scripted faults, epsilon retunes.
+                # Skipping them makes a journal double as a plain trace
+                # (the recorded workload replays as a scenario cell).
+                continue
+            jobs.append(_job_from_record(d))
     class_of = {int(j): c for j, c in header.get("class_of", {}).items()}
     return jobs, class_of, header.get("meta", {})
 
@@ -132,3 +143,11 @@ def _job_from_record(d: dict) -> JobSpec:
         name=d.get("name", ""),
         reduce_slowstart=float(d.get("reduce_slowstart", 1.0)),
     )
+
+
+# Public aliases for the live-service journal (repro.service.journal),
+# which writes job lines in this exact schema so a recorded session is
+# itself a loadable trace.  Unknown keys (the journal's "user"/"tag"
+# annotations) are ignored by job_from_record by construction.
+job_record = _job_record
+job_from_record = _job_from_record

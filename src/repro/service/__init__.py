@@ -1,0 +1,48 @@
+"""Live scheduler service: async master-worker runtime with the
+discrete-event :class:`~repro.core.simulator.Simulator` as its
+deterministic replay twin.
+
+The package turns the offline reproduction into a long-running service
+without forking the scheduling logic:
+
+* :mod:`repro.service.engine` — ``LiveEngine`` drives one ``Simulator``
+  against wall-clock time (``virtual_now = v0 + (wall - w0) *
+  time_scale``) and write-ahead journals every external stimulus;
+* :mod:`repro.service.journal` — the journal file *is* a repro-trace
+  (jobs in the exact :mod:`repro.scenarios.trace` schema, interleaved
+  with ``{"event": ...}`` lines for advance barriers, scripted faults
+  and epsilon retunes), so a recorded session replays bit-identically
+  through the Simulator — the twin property every test asserts;
+* :mod:`repro.service.master` — asyncio master: line-JSON protocol,
+  admission control, worker heartbeats/death/rejoin, checkpointing;
+* :mod:`repro.service.worker` — in-process worker agents plus the
+  ``python -m repro.service worker`` subprocess runner;
+* :mod:`repro.service.admission` — per-user queues, token-bucket rate
+  limits, max-live-jobs backpressure;
+* :mod:`repro.service.telemetry` — live counters in the
+  ``scenario_report`` vocabulary (sojourn/slowdown tails, Jain index,
+  goodput, decision latency).
+
+See docs/service.md for the architecture and the determinism contract.
+"""
+
+from repro.service.admission import AdmissionConfig, AdmissionControl
+from repro.service.engine import LiveEngine, live_fingerprint, replay_journal
+from repro.service.journal import Journal, read_journal
+from repro.service.master import Master, MasterConfig
+from repro.service.telemetry import Telemetry
+from repro.service.worker import WorkerAgent
+
+__all__ = [
+    "AdmissionConfig",
+    "AdmissionControl",
+    "Journal",
+    "LiveEngine",
+    "Master",
+    "MasterConfig",
+    "Telemetry",
+    "WorkerAgent",
+    "live_fingerprint",
+    "read_journal",
+    "replay_journal",
+]

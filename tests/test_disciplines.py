@@ -371,6 +371,51 @@ def test_stability_hysteresis_spread_reachable():
     assert pos and max(pos) - min(pos) > 0
 
 
+def test_rank_stability_batch_matches_per_job_calls():
+    """The fused multi-job projection must return, per job, exactly the
+    positions the per-job rank_stability call computes (scenario rows
+    are independent — this is what makes the batched on_pass prefetch
+    decision-neutral)."""
+    from repro.core import HFSPConfig, HFSPScheduler
+
+    cluster = ClusterSpec(num_machines=2, map_slots_per_machine=2,
+                          reduce_slots_per_machine=1)
+    sch = HFSPScheduler(cluster, HFSPConfig(sample_set_size=3))
+    for jid, dur in ((1, 10.0), (2, 11.0), (3, 12.0)):
+        sch.on_job_arrival(_job(jid, n_tasks=4, dur=dur), 0.0)
+        sch.vc[Phase.MAP].set_size(jid, 4 * dur)
+    # Two in-training jobs with spread-y observations.
+    for jid, obs in ((4, (1.0, 30.0)), (5, (2.0, 25.0))):
+        sch.on_job_arrival(_job(jid, n_tasks=10, dur=10.0), 0.0)
+        st = sch.training._training[(jid, Phase.MAP)]
+        st.observed[st.sample_keys[0]] = obs[0]
+        st.observed[st.sample_keys[1]] = obs[1]
+    want = {
+        jid: sch.rank_stability(jid, Phase.MAP, 0.0) for jid in (4, 5, 99)
+    }
+    got = sch.rank_stability_batch(Phase.MAP, [4, 5, 99], 0.0)
+    assert got == want
+    assert got[4] and got[5] and got[99] == []
+    assert sch.stats.rank_stability_batched == 2
+
+
+@pytest.mark.parametrize("seed", GOLDEN_SEEDS)
+def test_psbs_batched_prefetch_is_decision_neutral(seed, monkeypatch):
+    """A psbs run with the batched on_pass prefetch disabled (forced
+    back to the lazy per-job path) reproduces the default run bit for
+    bit — completions, stats, pass counts."""
+    lazy = None
+
+    def _disable(self, engine, phase, now, have_free):
+        return None
+
+    with monkeypatch.context() as m:
+        m.setattr(StabilityHysteresis, "on_pass", _disable)
+        lazy = run_trace("psbs", seed)
+    batched = run_trace("psbs", seed)
+    assert_traces_equal(lazy, batched)
+
+
 # ---------------------------------------------------------------------------
 # Routing equivalence: legacy schedulers through the registry
 # ---------------------------------------------------------------------------

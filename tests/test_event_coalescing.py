@@ -251,3 +251,92 @@ def test_eps_window_applies_mutations_at_own_timestamps():
     assert res0.completion[0] == 5.0 and res0.completion[1] == 5.3
     assert res1.completion[0] == 5.3 and res1.completion[1] == 5.3
     assert res1.passes < res0.passes
+
+
+# ---------------------------------------------------------------------------
+# event_epsilon="auto": burstiness-derived window width (PR 8)
+# ---------------------------------------------------------------------------
+def test_auto_event_epsilon_smooth_stream_disables_batching():
+    """Evenly spaced (CV=0) arrivals gain nothing from a window."""
+    from repro.core.simulator import auto_event_epsilon
+
+    assert auto_event_epsilon([float(i) for i in range(50)]) == 0.0
+
+
+def test_auto_event_epsilon_bursty_stream_picks_median_gap():
+    """Bursts of near-simultaneous arrivals separated by long idle gaps:
+    the window covers the intra-burst gaps (median) but not the
+    inter-burst ones."""
+    from repro.core.simulator import auto_event_epsilon
+
+    arrivals = []
+    for burst in range(10):
+        base = burst * 100.0
+        arrivals += [base + 0.01 * k for k in range(8)]
+    eps = auto_event_epsilon(arrivals, heartbeat=3.0)
+    assert eps == pytest.approx(0.01)
+
+
+def test_auto_event_epsilon_caps_at_heartbeat_and_degenerates_safely():
+    from repro.core.simulator import auto_event_epsilon
+
+    # All-simultaneous arrivals: mean gap 0 -> the full heartbeat.
+    assert auto_event_epsilon([5.0] * 10, heartbeat=3.0) == 3.0
+    # Fewer than 3 arrivals: one gap is not a distribution.
+    assert auto_event_epsilon([], heartbeat=3.0) == 0.0
+    assert auto_event_epsilon([1.0, 2.0], heartbeat=3.0) == 0.0
+    # Bursty with a huge median gap still caps at the heartbeat.
+    arrivals = [0.0, 0.0, 0.0, 1000.0, 1000.0, 1000.0, 5000.0]
+    assert auto_event_epsilon(arrivals, heartbeat=3.0) <= 3.0
+
+
+def test_simulator_accepts_auto_event_epsilon():
+    """event_epsilon="auto" resolves at construction to the same width
+    auto_event_epsilon reports for the job list, and the run is
+    bit-identical to passing that width explicitly."""
+    from repro.core import ClusterSpec, SimConfig, Simulator
+    from repro.core.disciplines import build_scheduler
+    from repro.core.simulator import auto_event_epsilon
+    from repro.workload import fb_dataset, WorkloadSpec
+
+    cluster = ClusterSpec(num_machines=10)
+    jobs, _ = fb_dataset(
+        seed=0, num_jobs=20, spec=WorkloadSpec(num_machines=10)
+    )
+    expect = auto_event_epsilon([j.arrival_time for j in jobs])
+    sim = Simulator(
+        cluster, build_scheduler("hfsp", cluster), jobs,
+        config=SimConfig(event_epsilon="auto"),
+    )
+    assert sim.event_epsilon == expect
+    res_auto = sim.run()
+    res_expl = Simulator(
+        cluster, build_scheduler("hfsp", cluster), jobs,
+        config=SimConfig(event_epsilon=expect),
+    ).run()
+    assert res_auto.completion == res_expl.completion
+    assert sim.passes == res_expl.passes
+
+    with pytest.raises(ValueError, match="auto"):
+        Simulator(
+            cluster, build_scheduler("hfsp", cluster), jobs,
+            config=SimConfig(event_epsilon="bogus"),
+        )
+
+
+def test_scenario_spec_accepts_auto_event_epsilon(tmp_path):
+    """"auto" round-trips through the spec dict/JSON form and runs."""
+    from repro.scenarios import run_scenario
+    from repro.scenarios.spec import ScenarioSpec, WorkloadAxis, ClusterAxis
+
+    spec = ScenarioSpec(
+        name="auto-eps",
+        workload=WorkloadAxis(kind="fb", num_jobs=10, num_hosts=5),
+        cluster=ClusterAxis(num_machines=5),
+        event_epsilon="auto",
+    )
+    again = ScenarioSpec.from_dict(spec.to_dict())
+    assert again.event_epsilon == "auto"
+    assert again.spec_hash() == spec.spec_hash()
+    rep = run_scenario(spec)
+    assert rep["jobs_completed"] == 10

@@ -14,10 +14,12 @@ from repro.core.metrics import (
     SojournSummary,
     ecdf,
     ecdf_quantiles,
+    jain_index,
     per_class_sojourns,
     per_job_delta,
     slowdowns,
     summarize,
+    tail_quantiles,
 )
 from repro.core.simulator import SimResult
 
@@ -130,3 +132,38 @@ def test_slowdowns_divides_by_serialized_size():
 def test_slowdowns_skips_nonpositive_sizes():
     res = _result(arrival={0: 0.0, 1: 0.0}, completion={0: 3.0, 1: 4.0})
     assert slowdowns(res, {0: 0.0}) == {}
+
+
+# ---------------------------------------------------------------------------
+# tail_quantiles / jain_index (PR 8: fairness-and-tails report block)
+# ---------------------------------------------------------------------------
+def test_tail_quantiles_keys_and_values():
+    q = tail_quantiles(list(range(1001)))
+    assert set(q) == {"p99", "p999"}
+    assert q["p99"] == pytest.approx(np.percentile(range(1001), 99))
+    assert q["p999"] == pytest.approx(np.percentile(range(1001), 99.9))
+    assert q["p999"] >= q["p99"]
+
+
+def test_tail_quantiles_empty():
+    assert tail_quantiles([]) == {"p99": 0.0, "p999": 0.0}
+
+
+def test_jain_index_perfectly_fair():
+    assert jain_index([3.0, 3.0, 3.0]) == pytest.approx(1.0)
+
+
+def test_jain_index_one_job_takes_all():
+    # n jobs, one gets everything -> index = 1/n.
+    assert jain_index([10.0, 0.0, 0.0, 0.0]) == pytest.approx(0.25)
+
+
+def test_jain_index_degenerate_inputs():
+    assert jain_index([]) == 1.0
+    assert jain_index([0.0, 0.0]) == 1.0
+
+
+def test_jain_index_range():
+    vals = [1.0, 2.0, 3.0, 50.0]
+    j = jain_index(vals)
+    assert 1.0 / len(vals) <= j <= 1.0
