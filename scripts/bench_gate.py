@@ -52,6 +52,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import platform
+import socket
 import sys
 import time
 from pathlib import Path
@@ -61,6 +64,31 @@ from pathlib import Path
 #: deterministic, so any drop is a policy change, but tiny shifts from
 #: re-tuned tie-breaks are expected PR-to-PR).
 JAIN_DROP_LIMIT = 0.05
+
+
+def machine_fingerprint() -> dict:
+    """Identify the machine a benchmark record was taken on.
+
+    Wall-clock numbers only compare meaningfully against a baseline from
+    the same hardware; the fingerprint (hostname + CPU count + CPU
+    model) travels with each history entry so the gate can detect that
+    the machine changed and treat the history as stale rather than
+    flagging a bogus regression (or, worse, silently ratcheting a fast
+    machine's numbers in as the bar for a slow one)."""
+    model = ""
+    try:
+        with open("/proc/cpuinfo") as f:
+            for ln in f:
+                if ln.lower().startswith("model name"):
+                    model = ln.split(":", 1)[1].strip()
+                    break
+    except OSError:
+        pass
+    return {
+        "hostname": socket.gethostname(),
+        "cpus": os.cpu_count() or 0,
+        "cpu_model": model or platform.processor(),
+    }
 
 
 def sojourn_regressions(
@@ -193,7 +221,24 @@ def gate(
             f"this run as the first entry, nothing to compare"
         )
         baseline = None
+    machine = machine_fingerprint()
+    if baseline is not None:
+        base_machine = baseline.get("machine")
+        # Entries from before the fingerprint field compare as before —
+        # only a *known different* machine invalidates the baseline.
+        if base_machine is not None and base_machine != machine:
+            print(
+                f"bench_gate: STALE baseline — recorded on "
+                f"{base_machine.get('hostname')!r} "
+                f"({base_machine.get('cpus')} cpus, "
+                f"{base_machine.get('cpu_model')!r}), this run is on "
+                f"{machine['hostname']!r} ({machine['cpus']} cpus, "
+                f"{machine['cpu_model']!r}); wall-clock comparison would "
+                f"be meaningless — treating this run as a fresh baseline"
+            )
+            baseline = None
     record["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%S%z")
+    record["machine"] = machine
     # Same-record discipline sanity bound (no baseline needed).
     disc_bad = discipline_regressions(
         record, discipline_factor, latency_floor_ms

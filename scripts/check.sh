@@ -10,7 +10,9 @@
 # regression — policy-level quality, not just speed — vs the previous
 # entry) + a paper-faults@quick goodput/sojourn summary (scheduling
 # under machine/task failures; informational, the properties themselves
-# are pinned by tests/test_faults.py).
+# are pinned by tests/test_faults.py) + the live-service smoke + the
+# distributed-sweep smoke (2 workers, 1 SIGKILLed; exactly-once
+# convergence with a reclaimed lease).
 #
 #   scripts/check.sh            # tests + quick bench + trajectory gate
 #   scripts/check.sh --no-bench # tests only
@@ -59,4 +61,12 @@ PY
   # mid-workload; fails if the journal's Simulator replay diverges from
   # the live run or p99 decision latency blows past the bound.
   python scripts/service_smoke.py --jobs 50 --p99-ms 250
+
+  echo
+  echo "== distributed sweep smoke (2 workers, 1 SIGKILLed mid-cell) =="
+  # Two CLI workers share a store on paper-fb@quick; the one holding a
+  # lease is SIGKILLed mid-cell.  Fails unless the survivor reclaims
+  # the lease (reissues >= 1) and the sweep converges exactly-once with
+  # zero quarantines.
+  python scripts/dist_sweep_smoke.py
 fi

@@ -1,0 +1,172 @@
+#!/usr/bin/env python
+"""Distributed-sweep smoke gate: 2 workers, one SIGKILLed mid-cell.
+
+Launches two ``python -m repro.scenarios worker`` processes against one
+shared store (sqlite by default; ``--backend jsonl`` for the reference
+backend), slows every cell's first attempt via the sweep test hook so
+the kill window is wide, SIGKILLs worker 1 while it provably holds a
+lease on an unfinished cell, and then requires:
+
+* **convergence** — the surviving worker completes the paper-fb@quick
+  matrix despite the dead worker's abandoned lease (reclaimed after the
+  TTL, no human intervention);
+* **exactly-once** — every cell is stored exactly once (raw line scan
+  for JSONL; key-set check for sqlite) with zero quarantines;
+* **observable reclaim** — the store's reissue counter is > 0 (the dead
+  worker's lease was expired and taken over, not silently lost).
+
+Exit 0 on success, 1 with a diagnosis on any violation.  Runs in
+scripts/check.sh after the service smoke.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.scenarios import get_preset, quick_sweep  # noqa: E402
+from repro.scenarios.store import open_store  # noqa: E402
+from repro.scenarios.worker import _TEST_HOOK_ENV  # noqa: E402
+
+
+def _spawn_worker(name: str, store: Path, env: dict, ttl: float):
+    return subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.scenarios", "worker", "paper-fb",
+            "--quick", "--store", str(store), "--worker-id", name,
+            "--ttl", str(ttl), "--renew-every", str(ttl / 4.0),
+            "--poll", "0.2", "--deadline", "240",
+        ],
+        env=env,
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+        text=True,
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=("sqlite", "jsonl"), default="sqlite")
+    ap.add_argument("--ttl", type=float, default=2.0,
+                    help="lease TTL: how long the dead worker's cell stays "
+                         "unreclaimable")
+    ap.add_argument("--slow", type=float, default=3.0,
+                    help="per-cell first-attempt delay (the kill window)")
+    ap.add_argument("--timeout", type=float, default=240.0)
+    args = ap.parse_args()
+
+    tmp = Path(tempfile.mkdtemp(prefix="dist_sweep_smoke_"))
+    store_path = tmp / ("store.sqlite" if args.backend == "sqlite" else "store.jsonl")
+    hook = tmp / "hook.json"
+    hook.write_text(json.dumps({
+        "slow_once": {"cells": "*", "seconds": args.slow},
+        "state_dir": str(tmp),
+    }))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{REPO / 'src'}{os.pathsep}{env.get('PYTHONPATH', '')}"
+    env[_TEST_HOOK_ENV] = str(hook)
+
+    sweep = quick_sweep(get_preset("paper-fb"))
+    expected = {(cid, spec.spec_hash()) for cid, spec in sweep.expand()}
+    store = open_store(store_path)
+
+    victim = _spawn_worker("smoke-victim", store_path, env, args.ttl)
+    survivor = _spawn_worker("smoke-survivor", store_path, env, args.ttl)
+    t0 = time.monotonic()
+    killed = False
+    try:
+        # SIGKILL the victim once it provably holds a lease on a cell
+        # whose result is not stored yet (i.e. it is mid-cell).
+        while not killed:
+            if time.monotonic() - t0 > args.timeout:
+                print("FAIL: victim never claimed a cell", file=sys.stderr)
+                return 1
+            done = store.load()
+            for key, lease in store.leases().items():
+                if lease.worker == "smoke-victim" and key not in done:
+                    victim.kill()  # SIGKILL: no cleanup, lease goes stale
+                    victim.wait()
+                    killed = True
+                    print(
+                        f"killed smoke-victim mid-cell {key[0]} "
+                        f"(lease ttl {args.ttl}s)"
+                    )
+                    break
+            time.sleep(0.05)
+        try:
+            out, _ = survivor.communicate(timeout=args.timeout)
+        except subprocess.TimeoutExpired:
+            survivor.kill()
+            print("FAIL: survivor did not converge in time", file=sys.stderr)
+            return 1
+        if survivor.returncode != 0:
+            print(
+                f"FAIL: survivor exited rc={survivor.returncode}:\n{out}",
+                file=sys.stderr,
+            )
+            return 1
+    finally:
+        for proc in (victim, survivor):
+            if proc.poll() is None:
+                proc.kill()
+
+    # -- convergence + zero quarantines -------------------------------
+    stored = store.load()
+    missing = {cid for cid, _ in expected} - {cid for cid, _ in stored}
+    if missing:
+        print(f"FAIL: sweep did not converge, missing {missing}", file=sys.stderr)
+        return 1
+    quarantined = [cid for (cid, _), r in stored.items() if r.get("quarantined")]
+    if quarantined:
+        print(f"FAIL: quarantined cells {quarantined}", file=sys.stderr)
+        return 1
+
+    # -- exactly-once -------------------------------------------------
+    if args.backend == "jsonl":
+        keys = []
+        for ln in store_path.read_text().splitlines():
+            try:
+                rec = json.loads(ln)
+            except json.JSONDecodeError:
+                continue
+            keys.append((rec["cell_id"], rec["spec_hash"]))
+        if len(keys) != len(set(keys)):
+            print(f"FAIL: duplicate store lines: {keys}", file=sys.stderr)
+            return 1
+    if set(stored) != expected:
+        print(
+            f"FAIL: stored keys {sorted(stored)} != expected {sorted(expected)}",
+            file=sys.stderr,
+        )
+        return 1
+
+    # -- observable reclaim -------------------------------------------
+    stats = store.stats()
+    if stats["reissues"] < 1:
+        print(
+            f"FAIL: dead worker's lease was never reclaimed (stats {stats})",
+            file=sys.stderr,
+        )
+        return 1
+
+    wall = time.monotonic() - t0
+    print(
+        f"OK: {len(stored)} cells exactly-once on {args.backend}, "
+        f"0 quarantined, reissues={stats['reissues']}, "
+        f"duplicates={stats['duplicates']} ({wall:.1f}s)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

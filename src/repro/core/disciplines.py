@@ -287,6 +287,17 @@ class PreemptionPolicy:
         observation landed).  Lets a policy mark cached verdicts dirty
         without scanning live jobs each pass.  Default: no-op."""
 
+    def on_wall_refresh(self, engine, now: float) -> int:
+        """Wall-clock-driven maintenance, reached only through the live
+        service's :meth:`~repro.core.scheduler.Scheduler.on_wall_tick`
+        seam (offline simulation never calls it).  MUST be
+        decision-neutral: only caches whose contents are bit-identical
+        to what the lazy path would compute may change, so the replay
+        twin — which replays journaled *simulation* events with no wall
+        clock — stays deterministic.  Returns how many cached entries
+        were refreshed (telemetry).  Default: no-op."""
+        return 0
+
     def forget(self, job_id: int) -> None:
         """Evict any per-job state (called by the engine when the job
         completes)."""
@@ -383,6 +394,46 @@ class StabilityHysteresis(PreemptionPolicy):
             self._cache[(jid, phase.value)] = (
                 n_obs, spread, spread > self.max_spread
             )
+
+    def on_wall_refresh(self, engine, now):
+        """Live-service stale-verdict refresh: drain BOTH phases' dirty
+        sets and re-price every genuinely stale verdict through one
+        batched projection per phase — no slot-starvation gate and no
+        2-job batch threshold, because wall time (a long idle stretch
+        between simulation events) is what triggered us, not a pass.
+        Decision-neutral by the same argument as :meth:`on_pass`: each
+        refreshed verdict is bit-identical to what the lazy
+        ``may_preempt`` path would compute on its next consult, so
+        scheduling decisions (and the replay twin) are unchanged — the
+        tick only moves the projection cost off the decision path."""
+        refreshed = 0
+        for phase in (Phase.MAP, Phase.REDUCE):
+            dirty = self._dirty[phase.value]
+            if not dirty:
+                continue
+            tr = engine.training
+            stale: list[tuple[int, int]] = []
+            for jid in dirty:
+                if not tr.is_training(jid, phase):
+                    continue
+                n_obs = tr.n_observations(jid, phase)
+                hit = self._cache.get((jid, phase.value))
+                if hit is None or hit[0] != n_obs:
+                    stale.append((jid, n_obs))
+            dirty.clear()
+            if not stale:
+                continue
+            positions = engine.rank_stability_batch(
+                phase, [jid for jid, _ in stale], now
+            )
+            for jid, n_obs in stale:
+                pos = positions.get(jid, [])
+                spread = (max(pos) - min(pos)) if pos else 0
+                self._cache[(jid, phase.value)] = (
+                    n_obs, spread, spread > self.max_spread
+                )
+            refreshed += len(stale)
+        return refreshed
 
     def forget(self, job_id: int) -> None:
         self._cache.pop((job_id, Phase.MAP.value), None)
@@ -712,10 +763,39 @@ register("las", engine_discipline(
     description="least attained service (size-oblivious reference)",
 ))
 
-register("psbs", engine_discipline(
-    "psbs",
-    VirtualFinishRank,
-    aging_factory=PSBSLateAging,
-    hysteresis=lambda mode: StabilityHysteresis(mode=mode),
+def _build_psbs(
+    cluster: ClusterSpec,
+    *,
+    psbs_late_factor: float = 1.0,
+    psbs_max_spread: int = 0,
+    **kwargs,
+) -> Scheduler:
+    """PSBS assembly with its calibration knobs exposed as scenario axes
+    (``scheduler.psbs_late_factor`` / ``scheduler.psbs_max_spread``, see
+    the ``paper-psbs-calibration`` preset): how aggressively late jobs
+    are re-injected, and how much rank-stability spread the hysteresis
+    tolerates before vetoing a preemption.  Defaults reproduce the PR 5
+    assembly exactly."""
+    from repro.core.hfsp import HFSPScheduler
+
+    cfg = _engine_config(**kwargs)
+    return HFSPScheduler(
+        cluster,
+        cfg,
+        rank=VirtualFinishRank(),
+        aging=PSBSLateAging(late_factor=float(psbs_late_factor)),
+        preemption_policy=StabilityHysteresis(
+            mode=cfg.preemption, max_spread=int(psbs_max_spread)
+        ),
+        name="psbs",
+    )
+
+
+register("psbs", Discipline(
+    name="psbs",
+    build=_build_psbs,
+    rank=VirtualFinishRank.name,
+    preemption="axis+stability",
+    aging=PSBSLateAging.name,
     description="PSBS: FSP + late-job aging + rank-stability hysteresis",
 ))

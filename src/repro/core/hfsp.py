@@ -133,6 +133,12 @@ class HFSPConfig(SchedulerConfig):
     vc_backend: str | None = None
     # Live-job threshold for the "auto" backend's numpy->jax latch.
     vc_auto_threshold: int = vcluster.AUTO_JAX_THRESHOLD
+    # Live-service wall-tick maintenance cadence (seconds of *wall*
+    # clock between stale-estimate refreshes through the preemption
+    # policy's on_wall_refresh hook).  Only reachable via the service
+    # master's on_wall_tick pacer — offline simulation never ticks, so
+    # the knob is inert there.  <= 0 disables.
+    wall_refresh_every: float = 10.0
 
 
 class HFSPScheduler(Scheduler):
@@ -237,6 +243,8 @@ class HFSPScheduler(Scheduler):
             self._err_rng = _np.random.default_rng(cfg.error_seed)
         else:
             self._err_rng = None
+        # Last wall-clock stale-estimate refresh (see on_wall_tick).
+        self._last_wall_refresh: float | None = None
 
     # ------------------------------------------------------------------
     # Aging (Sect. 3.1): each event distributes elapsed time as progress
@@ -259,11 +267,21 @@ class HFSPScheduler(Scheduler):
         return js
 
     def _perturb(self, est: float) -> float:
-        """Fig. 6 error injection on *finalized* estimates."""
+        """Fig. 6 error injection on *finalized* estimates.
+
+        Floored at a tiny positive size: with ``error_alpha > 1`` (the
+        paper-psbs-calibration preset's heavier-than-Fig.-6 regime) the
+        uniform factor can go negative, and a negative size is
+        meaningless to the virtual cluster.  For ``alpha <= 1`` the
+        factor is >= 0 and the floor changes nothing (an exactly-zero
+        draw has probability zero), so every pre-existing cell result
+        is untouched."""
         if self._err_rng is None or not math.isfinite(est):
             return est
         a = self.config.error_alpha
-        return float(est * self._err_rng.uniform(1.0 - a, 1.0 + a))
+        return float(
+            max(est * self._err_rng.uniform(1.0 - a, 1.0 + a), 1e-9)
+        )
 
     def _start_phase(self, js: JobState, phase: Phase) -> None:
         tasks = js.spec.tasks(phase)
@@ -595,6 +613,33 @@ class HFSPScheduler(Scheduler):
         if spread > self._max_rank_spread:
             self._max_rank_spread = spread
 
+    def on_wall_tick(self, wall_now: float, now: float) -> None:
+        """Live-service wall-clock maintenance (the first consumer of
+        the :meth:`~repro.core.scheduler.Scheduler.on_wall_tick` seam).
+
+        Every ``config.wall_refresh_every`` wall seconds, drain the
+        preemption policy's stale-verdict backlog through
+        ``on_wall_refresh`` — during long idle stretches between
+        simulation events the lazy refresh paths (``on_pass`` /
+        ``may_preempt``) never run, so without this tick a burst
+        arriving after an idle period pays the whole batched projection
+        on its first decision.  Sim-time purity: the hook is
+        decision-neutral by contract (refreshed cache entries are
+        bit-identical to what the lazy path would compute), so the
+        journal replay twin — which never ticks — produces the same
+        schedule; tests pin the completion fingerprint with and without
+        ticks."""
+        every = self.config.wall_refresh_every
+        if every is None or every <= 0:
+            return
+        last = self._last_wall_refresh
+        if last is not None and wall_now - last < every:
+            return
+        self._last_wall_refresh = wall_now
+        refreshed = self.preemption_policy.on_wall_refresh(self, now)
+        self.stats.wall_refreshes += 1
+        self.stats.wall_refreshed_verdicts += int(refreshed or 0)
+
     def whatif_diagnostics(self) -> dict:
         """Preemption-hysteresis / what-if diagnostics for the scenario
         report layer (one dict per cell; all JSON-serializable).  Counts
@@ -613,6 +658,15 @@ class HFSPScheduler(Scheduler):
             "rank_stability_batched": self.stats.rank_stability_batched,
             "max_rank_spread": self._max_rank_spread,
             "late_job_bumps": self.stats.late_job_bumps,
+            # Calibration knobs of the assembled policies (None when the
+            # assembly has no such knob — e.g. hfsp's plain FSP aging):
+            # the paper-psbs-calibration preset reads its swept
+            # late_factor/max_spread back from here per cell.
+            "late_factor": getattr(self.aging, "late_factor", None),
+            "max_spread": getattr(self.preemption_policy, "max_spread", None),
+            # Live-only wall-tick maintenance (always 0 offline).
+            "wall_refreshes": self.stats.wall_refreshes,
+            "wall_refreshed_verdicts": self.stats.wall_refreshed_verdicts,
         }
 
     def _update_hysteresis(self, view: ClusterView) -> None:

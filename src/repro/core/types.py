@@ -399,3 +399,10 @@ class SchedulerStats:
     #: projection per job on the lazy path).
     rank_stability_batched: int = 0
     late_job_bumps: int = 0
+    #: Live-service wall-tick maintenance (Scheduler.on_wall_tick ->
+    #: PreemptionPolicy.on_wall_refresh): how many wall-clock refresh
+    #: rounds ran, and how many cached stability verdicts they
+    #: re-priced.  Always 0 in offline simulation (never ticked) —
+    #: decision-neutral by contract, so these are telemetry only.
+    wall_refreshes: int = 0
+    wall_refreshed_verdicts: int = 0

@@ -7,9 +7,15 @@ The subsystem that owns "an experiment" (see docs/scenarios.md):
 * :mod:`repro.scenarios.trace`   — versioned JSONL trace export/replay;
 * :mod:`repro.scenarios.runner`  — one cell -> simulator -> report;
 * :mod:`repro.scenarios.sweep`   — parallel, resumable grid execution;
+* :mod:`repro.scenarios.store`   — pluggable shared-store backends
+  (fsync'd JSONL reference, sqlite for concurrent writers);
+* :mod:`repro.scenarios.lease`   — TTL'd cell-claim protocol;
+* :mod:`repro.scenarios.worker`  — distributed lease-claiming worker;
+* :mod:`repro.scenarios.coordinator` — ``sweep-status`` progress view;
 * :mod:`repro.scenarios.report`  — machine-readable JSON reductions.
 
-CLI: ``python -m repro.scenarios run paper-fb --quick``.
+CLI: ``python -m repro.scenarios run paper-fb --quick``; distributed:
+``python -m repro.scenarios worker paper-fb --store shared.sqlite``.
 """
 
 from repro.scenarios.presets import (
@@ -29,13 +35,17 @@ from repro.scenarios.spec import (
     SweepSpec,
     WorkloadAxis,
 )
-from repro.scenarios.sweep import ResultStore, run_sweep
+from repro.scenarios.coordinator import sweep_status
+from repro.scenarios.store import ResultStore, SqliteResultStore, open_store
+from repro.scenarios.sweep import run_sweep
 from repro.scenarios.trace import export_trace, load_trace
+from repro.scenarios.worker import run_worker
 
 __all__ = [
     "ClusterAxis",
     "FaultAxis",
     "ResultStore",
+    "SqliteResultStore",
     "ScenarioSpec",
     "SchedulerAxis",
     "SweepSpec",
@@ -45,11 +55,14 @@ __all__ = [
     "list_presets",
     "load_trace",
     "matrix_report",
+    "open_store",
     "paper_fb_base",
     "quick_sweep",
     "register_preset",
     "run_scenario",
     "run_sweep",
+    "run_worker",
     "scenario_report",
     "simulate",
+    "sweep_status",
 ]

@@ -8,11 +8,23 @@
   python -m repro.scenarios export-trace fb --seed 0 --num-jobs 100 \
                                  --machines 100 --out trace.jsonl
   python -m repro.scenarios replay trace.jsonl --policy hfsp [--machines 100]
+  python -m repro.scenarios worker paper-fb --store shared.sqlite \
+                                 [--quick] [--ttl 30] [--worker-id ID]
+  python -m repro.scenarios sweep-status paper-fb --store shared.sqlite \
+                                 [--quick] [--json-out]
 
 ``run`` executes a named preset sweep (optionally at reduced --quick
 scale), streaming per-cell progress, and prints the cross-cell matrix
 summary.  With ``--store`` the sweep is resumable: re-running skips every
-finished cell recorded in the store.
+finished cell recorded in the store (a ``.sqlite``/``.db`` path selects
+the sqlite backend — see repro.scenarios.store).
+
+``worker`` joins a *distributed* sweep: any number of worker processes,
+on any machines sharing the store, claim cells under TTL'd leases and
+converge the matrix exactly-once (docs/scenarios.md "Distributed
+sweeps").  ``sweep-status`` is the read-only coordinator view: per-cell
+done/leased/pending/quarantined state, per-worker liveness, and the
+store's claim/reissue/duplicate counters.
 """
 
 from __future__ import annotations
@@ -85,15 +97,19 @@ def _cmd_run(args) -> int:
         max_cells=args.max_cells,
         progress=progress,
     )
-    matrix = matrix_report(results)
+    matrix = matrix_report(results, expected=[cid for cid, _ in sweep.expand()])
     # Quarantined cells (self-healing sweep's poison records) carry no
-    # metrics: matrix_report lists and excludes them.
+    # metrics: matrix_report lists and excludes them; missing cells (a
+    # --max-cells cut or an interrupted/partial distributed run) are
+    # named so a degraded matrix states exactly what was dropped.
     means = matrix["mean_sojourn_s"]
     print(f"== matrix ({len(means)}/{total} cells) ==")
     for cid in sorted(means, key=lambda c: means[c]):
         print(f"  {cid}: mean_sojourn {means[cid]:.1f}s")
     for cid in matrix["quarantined"]:
         print(f"  {cid}: QUARANTINED ({results[cid]['error']})")
+    for cid in matrix["missing"]:
+        print(f"  {cid}: MISSING (not computed this run)")
     # Classify by the expanded spec, not the cell-id string: a grid that
     # does not sweep scheduler.policy produces ids without a policy key.
     policy_of = {cid: spec.scheduler.policy for cid, spec in sweep.expand()}
@@ -113,6 +129,55 @@ def _cmd_run(args) -> int:
                 f, indent=2, sort_keys=True,
             )
         print(f"wrote {args.json}")
+    return 0
+
+
+def _cmd_worker(args) -> int:
+    from repro.scenarios.worker import run_worker
+
+    sweep = get_preset(args.preset)
+    if args.quick:
+        sweep = quick_sweep(sweep)
+
+    def progress(cid: str, result: dict) -> None:
+        if result.get("quarantined"):
+            print(f"  {cid}: QUARANTINED ({result['error']})", flush=True)
+        else:
+            print(
+                f"  {cid}: mean_sojourn {result['mean_sojourn_s']:.1f}s  "
+                f"wall {result['wall_s']:.2f}s",
+                flush=True,
+            )
+
+    summary = run_worker(
+        sweep,
+        args.store,
+        worker_id=args.worker_id,
+        ttl=args.ttl,
+        renew_every=args.renew_every,
+        timeout=args.timeout,
+        max_retries=args.max_retries,
+        retry_backoff=args.retry_backoff,
+        poll=args.poll,
+        max_cells=args.max_cells,
+        deadline=args.deadline,
+        progress=progress,
+    )
+    print(json.dumps(summary, indent=2, sort_keys=True))
+    return 1 if summary["stalled"] else 0
+
+
+def _cmd_sweep_status(args) -> int:
+    from repro.scenarios.coordinator import format_status, sweep_status
+
+    sweep = get_preset(args.preset)
+    if args.quick:
+        sweep = quick_sweep(sweep)
+    status = sweep_status(sweep, args.store, dead_after=args.dead_after)
+    if args.json_out:
+        print(json.dumps(status, indent=2, sort_keys=True))
+    else:
+        print(format_status(status))
     return 0
 
 
@@ -174,6 +239,48 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--max-cells", type=int, default=None,
                    help="compute at most N new cells (testing/resume demos)")
 
+    p = sub.add_parser(
+        "worker",
+        help="join a distributed sweep: claim cells under leases from a "
+             "shared store until the matrix converges",
+    )
+    p.add_argument("preset")
+    p.add_argument("--store", required=True, metavar="PATH",
+                   help="shared result store (JSONL, or .sqlite/.db for "
+                        "the sqlite backend)")
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--worker-id", default=None,
+                   help="unique worker name (default hostname-pid)")
+    p.add_argument("--ttl", type=float, default=30.0,
+                   help="lease TTL seconds; a dead worker's cells are "
+                        "reclaimable this long after its last renewal")
+    p.add_argument("--renew-every", type=float, default=None,
+                   help="lease renewal interval (default ttl/3)")
+    p.add_argument("--poll", type=float, default=0.5,
+                   help="idle wait when all pending cells are leased")
+    p.add_argument("--timeout", type=float, default=600.0,
+                   help="per-attempt wall-clock budget (seconds)")
+    p.add_argument("--max-retries", type=int, default=2)
+    p.add_argument("--retry-backoff", type=float, default=0.5)
+    p.add_argument("--max-cells", type=int, default=None,
+                   help="compute at most N cells then exit")
+    p.add_argument("--deadline", type=float, default=None,
+                   help="total wall-clock bound; exit stalled (rc 1) on "
+                        "expiry instead of waiting on foreign leases")
+
+    p = sub.add_parser(
+        "sweep-status",
+        help="read-only coordinator view of a distributed sweep's store",
+    )
+    p.add_argument("preset")
+    p.add_argument("--store", required=True, metavar="PATH")
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--json-out", action="store_true",
+                   help="machine-readable JSON instead of the text view")
+    p.add_argument("--dead-after", type=float, default=60.0,
+                   help="heartbeat age (seconds) past which a worker is "
+                        "reported dead")
+
     p = sub.add_parser("export-trace", help="synthesize + export a trace")
     p.add_argument("kind", choices=("fb", "fb_scaled", "ml"))
     p.add_argument("--seed", type=int, default=0)
@@ -203,6 +310,8 @@ def main(argv: list[str] | None = None) -> int:
         "list": _cmd_list,
         "show": _cmd_show,
         "run": _cmd_run,
+        "worker": _cmd_worker,
+        "sweep-status": _cmd_sweep_status,
         "export-trace": _cmd_export_trace,
         "replay": _cmd_replay,
     }[args.cmd](args)

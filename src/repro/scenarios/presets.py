@@ -145,6 +145,43 @@ def _paper_estimation_error_disciplines() -> SweepSpec:
     )
 
 
+@register_preset("paper-psbs-calibration")
+def _paper_psbs_calibration() -> SweepSpec:
+    """Beyond-paper: calibrate PSBS's two knobs under estimation error
+    *heavier* than the Fig. 6 sweep ever applies (alpha 1.5 / 2.0 vs the
+    FB sweep's max of 1.0 — at alpha > 1 the multiplicative error can
+    drive estimates to (almost) zero, the regime PSBS was designed for).
+    Grid 1 sweeps ``late_factor`` (how aggressively the virtual cluster
+    ages jobs whose real progress outruns their estimate) x
+    ``max_spread`` (rank-stability hysteresis window: 0 = re-rank on any
+    verdict flip, 3 = tolerate small spreads before preempting) x error
+    alpha.  Grid 2 runs hfsp and las at the same alphas as references —
+    hfsp shares the virtual-cluster machinery without late aging, las
+    never reads sizes at all.  Each cell's ``whatif`` block reports the
+    swept knob values (``late_factor`` / ``max_spread``), so the report
+    matrix is self-describing."""
+    base = paper_fb_base().override(**{
+        "workload.map_only": True,
+        "scheduler.policy": "psbs",
+        "name": "paper-psbs-calibration",
+    })
+    return SweepSpec(
+        name="paper-psbs-calibration",
+        base=base,
+        grids=(
+            SweepSpec.grid(**{
+                "scheduler.psbs_late_factor": (0.5, 1.0, 2.0),
+                "scheduler.psbs_max_spread": (0, 3),
+                "scheduler.error_alpha": (1.5, 2.0),
+            }),
+            SweepSpec.grid(**{
+                "scheduler.policy": ("hfsp", "las"),
+                "scheduler.error_alpha": (1.5, 2.0),
+            }),
+        ),
+    )
+
+
 @register_preset("paper-fb-eps")
 def _paper_fb_eps() -> SweepSpec:
     """Beyond-paper: the Fig. 3 comparison under epsilon-window event

@@ -144,7 +144,7 @@ def per_job_delta_summary(a: SimResult, b: SimResult) -> dict:
     }
 
 
-def matrix_report(cells: dict[str, dict]) -> dict:
+def matrix_report(cells: dict[str, dict], expected=None) -> dict:
     """Cross-cell reduction over one sweep's finished cells.
 
     ``cells`` maps cell_id -> scenario_report dict.  Returns a compact
@@ -154,7 +154,16 @@ def matrix_report(cells: dict[str, dict]) -> dict:
     Quarantined cells (the self-healing sweep runner's poison-cell
     records, ``{"quarantined": True, ...}``) carry no metrics: they are
     listed under ``"quarantined"`` and excluded from the comparison.
+
+    ``expected`` (optional iterable of cell ids — typically the sweep's
+    full expansion) makes degradation explicit: cells expected but
+    absent from ``cells`` (dead workers, interrupted run, ``max_cells``
+    cut) are listed under ``"missing"``, so a partial matrix states
+    exactly what was dropped instead of silently comparing fewer cells.
     """
+    missing = (
+        sorted(set(expected) - set(cells)) if expected is not None else []
+    )
     quarantined = sorted(c for c, r in cells.items() if r.get("quarantined"))
     cells = {c: r for c, r in cells.items() if not r.get("quarantined")}
     means = {cid: c["mean_sojourn_s"] for cid, c in cells.items()}
@@ -168,6 +177,7 @@ def matrix_report(cells: dict[str, dict]) -> dict:
     return {
         "cells": len(cells),
         "quarantined": quarantined,
+        "missing": missing,
         "mean_sojourn_s": means,
         "best": ranked[0] if ranked else None,
         "mean_ratio_vs_best": ratios,

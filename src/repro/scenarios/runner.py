@@ -99,6 +99,8 @@ def build_scheduler(spec: ScenarioSpec, cluster: ClusterSpec):
         error_alpha=s.error_alpha,
         error_seed=s.error_seed,
         vc_backend=s.vc_backend,
+        psbs_late_factor=s.psbs_late_factor,
+        psbs_max_spread=s.psbs_max_spread,
     )
 
 

@@ -115,6 +115,15 @@ class SchedulerAxis:
     #: Virtual-cluster numeric backend (None = auto-select, see
     #: repro.core.vcluster.resolve_backend).
     vc_backend: str | None = None
+    #: PSBS calibration knobs (repro.core.disciplines._build_psbs; the
+    #: ``paper-psbs-calibration`` preset sweeps them): late-job
+    #: re-injection aggressiveness and the rank-stability spread the
+    #: preemption hysteresis tolerates.  Ignored by every other policy.
+    #: At their defaults these fields are *omitted* from ``to_dict`` —
+    #: like a disabled FaultAxis — so every pre-existing spec hash (and
+    #: therefore every stored sweep result) stays valid.
+    psbs_late_factor: float = 1.0
+    psbs_max_spread: int = 0
 
     def __post_init__(self) -> None:
         if self.preemption not in PREEMPTIONS:
@@ -184,12 +193,20 @@ class ScenarioSpec:
 
     # -- JSON round-trip -----------------------------------------------------
     def to_dict(self) -> dict:
+        sched = _axis_dict(self.scheduler)
+        # Default-valued psbs knobs are omitted (the FaultAxis rule: a
+        # knob at its default must not perturb the hash, so spec hashes
+        # minted before the knob existed — and every stored sweep
+        # result keyed by them — stay valid).
+        for knob in ("psbs_late_factor", "psbs_max_spread"):
+            if sched[knob] == _SCHEDULER_DEFAULTS[knob]:
+                del sched[knob]
         d = {
             "version": SPEC_VERSION,
             "name": self.name,
             "workload": _axis_dict(self.workload),
             "cluster": _axis_dict(self.cluster),
-            "scheduler": _axis_dict(self.scheduler),
+            "scheduler": sched,
             "heartbeat": self.heartbeat,
             "event_epsilon": self.event_epsilon,
         }
@@ -272,6 +289,10 @@ class ScenarioSpec:
 
 def _axis_dict(axis) -> dict:
     return {f.name: getattr(axis, f.name) for f in fields(axis)}
+
+
+#: SchedulerAxis field defaults (for the to_dict omit-at-default rule).
+_SCHEDULER_DEFAULTS = {f.name: f.default for f in fields(SchedulerAxis)}
 
 
 # ---------------------------------------------------------------------------

@@ -3,8 +3,9 @@
 ``run_sweep`` expands a :class:`~repro.scenarios.spec.SweepSpec` into its
 scenario cells and fans them out across worker *processes* (the simulator
 is pure Python — process pools are the only way to use multiple cores).
-Results stream into a :class:`ResultStore` (append-only JSONL) as cells
-finish, keyed by ``(cell_id, spec_hash)``:
+Results stream into a store (see :mod:`repro.scenarios.store`; the
+reference backend is append-only JSONL, ``open_store`` also accepts a
+sqlite path) as cells finish, keyed by ``(cell_id, spec_hash)``:
 
 * **resume** — a re-run of an interrupted sweep skips every cell whose
   (cell_id, spec_hash) pair is already stored, recomputing nothing;
@@ -34,6 +35,13 @@ attempt, so a sick cell cannot take the sweep down with it):
   loser is killed.  Purity makes the race safe: both attempts compute
   the same result.
 
+This module is the *local* (single-machine, private-store) executor.
+The distributed fabric reuses the same per-attempt primitives under a
+lease protocol: see :mod:`repro.scenarios.worker` (lease-claiming
+worker loop), :mod:`repro.scenarios.store` (pluggable shared-store
+backends), :mod:`repro.scenarios.lease` (claim/renew/release protocol)
+and :mod:`repro.scenarios.coordinator` (``sweep-status`` view).
+
 Workers use the ``spawn`` start method: the parent may hold jax state
 (the vcluster jax backend), which does not survive ``fork``.
 """
@@ -41,120 +49,22 @@ Workers use the ``spawn`` start method: the parent may hold jax state
 from __future__ import annotations
 
 import itertools
-import json
-import os
 import time
 from pathlib import Path
 
 from repro.core.faults import FirstFinisherWins
 from repro.scenarios.runner import run_scenario
 from repro.scenarios.spec import ScenarioSpec, SweepSpec
-
-#: Env var naming a JSON file of test-only worker fault hooks —
-#: ``{"hang_once": [cell_ids], "fail_always": [cell_ids], "state_dir":
-#: path}`` — read inside the *spawned* attempt process (a spawn child
-#: cannot see parent monkeypatches, so the self-healing tests inject
-#: hangs/failures through the environment instead).
-_TEST_HOOK_ENV = "_REPRO_SWEEP_TEST_HOOK"
-
-
-class ResultStore:
-    """Append-only JSONL store of finished sweep cells.
-
-    One line per finished cell::
-
-        {"cell_id": ..., "spec_hash": ..., "result": {scenario_report}}
-
-    Append-only + line-granular means a crash mid-write loses at most the
-    last line (a torn trailing line is detected and ignored on load).
-    """
-
-    def __init__(self, path: str | Path):
-        self.path = Path(path)
-
-    def load(self) -> dict[tuple[str, str], dict]:
-        """{(cell_id, spec_hash): result} for every intact stored line."""
-        out: dict[tuple[str, str], dict] = {}
-        if not self.path.exists():
-            return out
-        with self.path.open() as f:
-            for ln in f:
-                ln = ln.strip()
-                if not ln:
-                    continue
-                try:
-                    rec = json.loads(ln)
-                except json.JSONDecodeError:
-                    continue  # torn trailing line from an interrupted run
-                out[(rec["cell_id"], rec["spec_hash"])] = rec["result"]
-        return out
-
-    def append(self, cell_id: str, spec_hash: str, result: dict) -> None:
-        self.path.parent.mkdir(parents=True, exist_ok=True)
-        rec = {"cell_id": cell_id, "spec_hash": spec_hash, "result": result}
-        # A crash can lose the previous record's trailing newline while
-        # its JSON survived (load() still recovers it); appending onto
-        # that unterminated line would corrupt BOTH records, so repair
-        # the newline first.
-        lead = ""
-        if self.path.exists():
-            with self.path.open("rb") as f:
-                f.seek(0, os.SEEK_END)
-                if f.tell() > 0:
-                    f.seek(-1, os.SEEK_END)
-                    if f.read(1) != b"\n":
-                        lead = "\n"
-        with self.path.open("a") as f:
-            f.write(lead + json.dumps(rec, sort_keys=True) + "\n")
-            f.flush()
-            os.fsync(f.fileno())
-
-
-def _quarantine_record(cid: str, error: str, attempts: int) -> dict:
-    """The poison-cell record stored in place of a scenario report."""
-    return {
-        "quarantined": True,
-        "cell_id": cid,
-        "error": error,
-        "attempts": attempts,
-    }
-
-
-def _run_cell(payload: tuple[str, dict]) -> tuple[str, dict]:
-    """Compute one cell from its serialized spec."""
-    cid, spec_dict = payload
-    return cid, run_scenario(ScenarioSpec.from_dict(spec_dict))
-
-
-def _apply_test_hook(cid: str) -> None:
-    path = os.environ.get(_TEST_HOOK_ENV)
-    if not path:
-        return
-    with open(path) as f:
-        hook = json.load(f)
-    if cid in hook.get("fail_always", ()):
-        raise RuntimeError(f"sweep test hook: cell {cid!r} fails")
-    if cid in hook.get("hang_once", ()):
-        marker = Path(hook["state_dir"]) / f"hung-{cid}"
-        if not marker.exists():
-            marker.write_text("hung once\n")
-            time.sleep(3600.0)  # until the supervisor's timeout kills us
-
-
-def _cell_worker(conn, cid: str, spec_dict: dict) -> None:
-    """Spawned per-attempt process entry point: compute the cell, send
-    ("ok", report) or ("err", repr) back over the pipe."""
-    try:
-        _apply_test_hook(cid)
-        _, result = _run_cell((cid, spec_dict))
-        conn.send(("ok", result))
-    except BaseException as e:  # noqa: BLE001 - reported to the supervisor
-        try:
-            conn.send(("err", repr(e)))
-        except Exception:
-            pass
-    finally:
-        conn.close()
+from repro.scenarios.store import (  # noqa: F401 - ResultStore re-exported
+    ResultStore,
+    SweepStore,
+    open_store,
+)
+from repro.scenarios.worker import (  # noqa: F401 - hook re-exported for tests
+    _TEST_HOOK_ENV,
+    _cell_worker,
+    _quarantine_record,
+)
 
 
 class _Attempt:
@@ -168,7 +78,7 @@ class _Attempt:
 
 def run_sweep(
     sweep: SweepSpec,
-    store: ResultStore | str | Path | None = None,
+    store: SweepStore | str | Path | None = None,
     workers: int = 0,
     max_cells: int | None = None,
     progress=None,
@@ -187,6 +97,13 @@ def run_sweep(
     mid-grid and assert resume semantics.  ``progress`` is an optional
     ``f(cell_id, result)`` callback invoked as each cell finishes.
 
+    ``store`` accepts a backend instance or a path (coerced via
+    :func:`~repro.scenarios.store.open_store`, so ``results.sqlite``
+    selects the sqlite backend).  To spread one sweep across machines
+    sharing a store, run :func:`repro.scenarios.worker.run_worker`
+    loops instead — this function is the local executor and does not
+    take leases.
+
     Self-healing knobs (parallel path): ``timeout`` is the per-attempt
     wall-clock budget in seconds (None = unbounded); a failed or
     timed-out cell retries up to ``max_retries`` times with capped
@@ -196,8 +113,8 @@ def run_sweep(
     wins).  The inline path applies retry + quarantine only — there is
     no process boundary to kill, so no timeout or re-issue.
     """
-    if store is not None and not isinstance(store, ResultStore):
-        store = ResultStore(store)
+    if store is not None and not isinstance(store, SweepStore):
+        store = open_store(store)
     cells = sweep.expand()
     done = store.load() if store is not None else {}
 

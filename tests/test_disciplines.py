@@ -490,3 +490,99 @@ def test_discipline_eps_half_reproducible(name):
     b = run_trace(name, 0, event_epsilon=0.5)
     assert_traces_equal(a, b)
     assert len(a["completion"]) == 30
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock refresh (the first on_wall_tick consumer)
+# ---------------------------------------------------------------------------
+def test_wall_tick_gated_by_refresh_interval():
+    """on_wall_tick fires at most once per ``wall_refresh_every`` wall
+    seconds, and a non-positive interval disables it entirely."""
+    from repro.workload import fb_cluster
+
+    sch = disciplines.build_scheduler("psbs", fb_cluster(num_machines=4))
+    assert sch.config.wall_refresh_every == 10.0
+    sch.on_wall_tick(100.0, 0.0)
+    assert sch.stats.wall_refreshes == 1
+    sch.on_wall_tick(105.0, 0.0)  # inside the interval: gated
+    assert sch.stats.wall_refreshes == 1
+    sch.on_wall_tick(110.0, 0.0)
+    assert sch.stats.wall_refreshes == 2
+
+    sch.config.wall_refresh_every = 0.0
+    sch.on_wall_tick(1000.0, 0.0)
+    assert sch.stats.wall_refreshes == 2  # disabled
+
+
+def test_wall_refresh_reprices_stale_verdicts():
+    """A wall refresh drains the hysteresis policy's dirty set: stale
+    verdicts are re-priced through the batched projection and the cached
+    verdict matches what the lazy may_preempt path computes."""
+    from repro.core import HFSPConfig, HFSPScheduler
+
+    cluster = ClusterSpec(num_machines=2, map_slots_per_machine=2,
+                          reduce_slots_per_machine=1)
+
+    def build():
+        sch = HFSPScheduler(
+            cluster,
+            HFSPConfig(sample_set_size=3),
+            preemption_policy=StabilityHysteresis(max_spread=0),
+        )
+        for jid, dur in ((1, 10.0), (2, 11.0), (3, 12.0)):
+            sch.on_job_arrival(_job(jid, n_tasks=4, dur=dur), 0.0)
+            sch.vc[Phase.MAP].set_size(jid, 4 * dur)
+        sch.on_job_arrival(_job(4, n_tasks=10, dur=10.0), 0.0)
+        st = sch.training._training[(4, Phase.MAP)]
+        st.observed[st.sample_keys[0]] = 1.0
+        st.observed[st.sample_keys[1]] = 30.0
+        return sch
+
+    # Eager path: mark the verdict stale, drain it via on_wall_tick.
+    sch = build()
+    pol = sch.preemption_policy
+    pol.on_estimate(sch, 4, Phase.MAP)
+    sch.on_wall_tick(50.0, 0.0)
+    assert sch.stats.wall_refreshes == 1
+    assert sch.stats.wall_refreshed_verdicts == 1
+    assert not pol._dirty[Phase.MAP.value]
+    cached = pol._cache[(4, Phase.MAP.value)]
+
+    # Lazy path on an identical engine: may_preempt must agree with the
+    # refreshed cache bit-for-bit (decision neutrality).
+    sch2 = build()
+    pol2 = sch2.preemption_policy
+    js = sch2.jobs[4]
+    verdict = pol2.may_preempt(sch2, js, Phase.MAP, 0.0)
+    assert pol2._cache[(4, Phase.MAP.value)] == cached
+    assert verdict is (not cached[2])
+
+
+def test_wall_tick_preserves_sim_purity():
+    """Completion times are bit-identical whether or not wall ticks
+    interleave the simulation — the refresh hook is decision-neutral, so
+    the service's replay twin (which never ticks) stays faithful."""
+    from repro.core import Simulator
+    from repro.workload import fb_cluster, fb_dataset
+
+    cluster = fb_cluster(num_machines=10)
+
+    def run(tick: bool):
+        jobs, _ = fb_dataset(seed=0, num_jobs=20)
+        sch = disciplines.build_scheduler("psbs", cluster)
+        sim = Simulator(cluster, sch, jobs)
+        if not tick:
+            return sim.run(), sch
+        res, wall, t = None, 0.0, 0.0
+        while True:
+            t += 25.0
+            res = sim.run(until=t)
+            wall += 11.0  # one refresh interval per slice
+            sch.on_wall_tick(wall, t)
+            if not sim._heap:
+                return sim.run(), sch
+
+    ticked, sch_t = run(tick=True)
+    plain, _ = run(tick=False)
+    assert sch_t.stats.wall_refreshes > 0
+    assert sorted(ticked.completion.items()) == sorted(plain.completion.items())

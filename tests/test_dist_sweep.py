@@ -1,0 +1,562 @@
+"""Distributed sweep fabric tests: the backend-parametrized store
+contract, lease fold/keeper semantics, concurrent-writer interleavings
+with injected partial writes, per-backend crash-consistency properties,
+worker-loop convergence, the coordinator view, and the chaos acceptance
+test (workers SIGKILLed mid-cell; the sweep still converges exactly-once
+with payloads bit-identical to a single-process run).
+
+Crash models differ per backend and the tests encode that: the JSONL
+reference backend must survive truncation at EVERY byte offset (its
+crash surface is a torn trailing line), while sqlite's journaled commits
+are exercised by SIGKILLing a live appender process at seeded-random
+points — arbitrary byte truncation of a sqlite file is disk corruption,
+not a crash, and is out of contract.
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.scenarios import (
+    ClusterAxis,
+    ResultStore,
+    ScenarioSpec,
+    SchedulerAxis,
+    SqliteResultStore,
+    SweepSpec,
+    WorkloadAxis,
+    get_preset,
+    matrix_report,
+    open_store,
+    quick_sweep,
+    run_sweep,
+    run_worker,
+    sweep_status,
+)
+from repro.scenarios.lease import COUNTERS, Lease, LeaseKeeper, fold_lease_log
+from repro.scenarios.worker import _TEST_HOOK_ENV
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(params=["jsonl", "sqlite"])
+def store(request, tmp_path):
+    """One store per backend; every contract test runs against both."""
+    if request.param == "jsonl":
+        return ResultStore(tmp_path / "store.jsonl")
+    return SqliteResultStore(tmp_path / "store.sqlite")
+
+
+def _worker_env(hook_path=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src")
+    if hook_path is not None:
+        env[_TEST_HOOK_ENV] = str(hook_path)
+    else:
+        env.pop(_TEST_HOOK_ENV, None)
+    return env
+
+
+# ---------------------------------------------------------------------------
+# Store contract (both backends)
+# ---------------------------------------------------------------------------
+def test_open_store_routes_by_path(tmp_path):
+    assert isinstance(open_store(tmp_path / "a.jsonl"), ResultStore)
+    assert isinstance(open_store(tmp_path / "a.sqlite"), SqliteResultStore)
+    assert isinstance(open_store(tmp_path / "a.db"), SqliteResultStore)
+    assert isinstance(
+        open_store("sqlite:" + str(tmp_path / "noext")), SqliteResultStore
+    )
+    assert isinstance(
+        open_store(tmp_path / "a.jsonl", backend="sqlite"), SqliteResultStore
+    )
+    existing = ResultStore(tmp_path / "b.jsonl")
+    assert open_store(existing) is existing
+    with pytest.raises(ValueError):
+        open_store(tmp_path / "x", backend="nope")
+
+
+def test_append_is_exactly_once_and_counts_duplicates(store):
+    assert store.append("c1", "h1", {"v": 1}) is True
+    assert store.append("c1", "h1", {"v": 999}) is False  # first wins
+    assert store.append("c1", "h2", {"v": 2}) is True  # new hash = new key
+    loaded = store.load()
+    assert loaded[("c1", "h1")] == {"v": 1}
+    assert loaded[("c1", "h2")] == {"v": 2}
+    assert store.stats()["duplicates"] == 1
+
+
+def test_stats_keys_always_present(store):
+    assert set(store.stats()) >= set(COUNTERS)
+    assert all(v == 0 for v in store.stats().values())
+
+
+def test_lease_lifecycle_and_expired_reclaim(store):
+    t0 = 1000.0
+    assert store.claim("c", "h", "w1", ttl=10.0, now=t0)
+    # Live foreign lease: claim fails, renew by a stranger fails.
+    assert not store.claim("c", "h", "w2", ttl=10.0, now=t0 + 5.0)
+    assert not store.renew("c", "h", "w2", ttl=10.0, now=t0 + 5.0)
+    # The holder renews and re-claims freely.
+    assert store.renew("c", "h", "w1", ttl=10.0, now=t0 + 5.0)
+    assert store.claim("c", "h", "w1", ttl=10.0, now=t0 + 6.0)
+    lease = store.leases()[("c", "h")]
+    assert lease.worker == "w1" and lease.expires == t0 + 16.0
+    # Past the TTL the foreign claim takes over — a counted reissue.
+    assert store.claim("c", "h", "w2", ttl=10.0, now=t0 + 20.0)
+    assert store.leases()[("c", "h")].worker == "w2"
+    stats = store.stats()
+    assert stats["reissues"] == 1
+    assert stats["claims"] == 3
+    assert stats["renews"] == 1
+    # Release by a non-holder is a no-op; by the holder it drops the row.
+    store.release("c", "h", "w1")
+    assert ("c", "h") in store.leases()
+    store.release("c", "h", "w2")
+    assert ("c", "h") not in store.leases()
+    assert store.stats()["releases"] == 1
+
+
+def test_heartbeat_merges_info_and_keeps_last_seen_monotonic(store):
+    store.heartbeat("w1", info={"host": "a", "done": 1}, now=100.0)
+    store.heartbeat("w1", info={"done": 2}, now=200.0)
+    store.heartbeat("w1", now=50.0)  # late-arriving beat must not rewind
+    w = store.workers()["w1"]
+    assert w["last_seen"] == 200.0
+    assert w["info"] == {"host": "a", "done": 2}
+
+
+# ---------------------------------------------------------------------------
+# Lease fold + keeper
+# ---------------------------------------------------------------------------
+def test_fold_lease_log_is_reader_clock_independent():
+    # Whether a claim was a reissue travels IN the claim row (decided by
+    # the claiming writer under the store lock), so the fold needs no
+    # clock of its own and every reader agrees on the counters.
+    state = fold_lease_log([
+        {"op": "claim", "cell_id": "c", "spec_hash": "h", "worker": "w1",
+         "expires": 10.0, "t": 0.0, "reissue": False},
+        {"op": "renew", "cell_id": "c", "spec_hash": "h", "worker": "w1",
+         "expires": 20.0, "t": 5.0},
+        # A stranger's renew must not steal the lease.
+        {"op": "renew", "cell_id": "c", "spec_hash": "h", "worker": "wX",
+         "expires": 99.0, "t": 6.0},
+        {"op": "claim", "cell_id": "c", "spec_hash": "h", "worker": "w2",
+         "expires": 40.0, "t": 25.0, "reissue": True},
+        {"op": "dup", "cell_id": "c", "spec_hash": "h", "worker": "w1",
+         "t": 26.0},
+        {"op": "release", "cell_id": "c", "spec_hash": "h", "worker": "w2",
+         "t": 30.0},
+        {"op": "beat", "worker": "w3", "t": 31.0, "info": {"pid": 7}},
+        {"op": "from-the-future", "worker": "w9", "t": 99.0},  # ignored
+    ])
+    assert state.leases == {}
+    assert state.counters == {
+        "claims": 2, "reissues": 1, "renews": 2, "releases": 1,
+        "duplicates": 1,
+    }
+    assert state.workers["w3"]["info"] == {"pid": 7}
+    assert "w9" not in state.workers
+
+
+def test_lease_dataclass_expiry():
+    lease = Lease("c", "h", "w", expires=100.0)
+    assert not lease.expired(99.9)
+    assert lease.expired(100.0)
+    assert lease.remaining(90.0) == pytest.approx(10.0)
+
+
+def test_lease_keeper_renews_then_detects_loss(tmp_path):
+    store = ResultStore(tmp_path / "s.jsonl")
+    assert store.claim("c", "h", "w1", ttl=5.0)
+    keeper = LeaseKeeper(store, "c", "h", "w1", ttl=5.0, renew_every=0.01)
+    time.sleep(0.02)
+    keeper.tick()
+    assert keeper.renewals == 1 and not keeper.lost
+    # Another worker takes the cell over (as after this worker's TTL
+    # expired); the keeper notices on its next due tick but keeps going.
+    store.claim("c", "h", "w2", ttl=5.0, now=time.time() + 100.0)
+    time.sleep(0.02)
+    keeper.tick()
+    assert keeper.lost
+
+
+# ---------------------------------------------------------------------------
+# Concurrent writers + injected partial writes
+# ---------------------------------------------------------------------------
+_APPENDER = """
+import json, os, sys, time
+sys.path.insert(0, {src!r})
+from repro.scenarios.store import open_store
+
+store = open_store({store_path!r})
+n = {n}
+ack = open({ack_path!r}, "a")
+for i in range({start}, n):
+    if store.append(f"cell-{{i}}", "hash", {{"payload": i, "by": {tag!r}}}):
+        ack.write(f"{{i}}\\n")
+        ack.flush()
+        os.fsync(ack.fileno())
+    time.sleep({delay})
+"""
+
+
+def _spawn_appender(tmp_path, store_path, tag, n, *, start=0, delay=0.0):
+    script = tmp_path / f"appender-{tag}.py"
+    script.write_text(_APPENDER.format(
+        src=str(REPO_ROOT / "src"), store_path=str(store_path),
+        ack_path=str(tmp_path / f"ack-{tag}.txt"), n=n, start=start,
+        tag=tag, delay=delay,
+    ))
+    return subprocess.Popen(
+        [sys.executable, str(script)], env=_worker_env(),
+        stdout=subprocess.DEVNULL, stderr=subprocess.PIPE,
+    )
+
+
+def test_concurrent_writers_never_lose_or_duplicate(store, tmp_path):
+    """Two racing processes append the SAME 20 (cell_id, spec_hash) keys
+    against one store file: every key lands exactly once, each payload is
+    one writer's intact record (never an interleaving of both), and the
+    losers' appends are counted as duplicates."""
+    n = 20
+    procs = [
+        _spawn_appender(tmp_path, store.path, tag, n) for tag in ("a", "b")
+    ]
+    for p in procs:
+        assert p.wait(timeout=60) == 0, p.stderr.read().decode()
+    loaded = store.load()
+    assert len(loaded) == n
+    for i in range(n):
+        rec = loaded[(f"cell-{i}", "hash")]
+        assert rec["payload"] == i
+        assert rec["by"] in ("a", "b")  # one writer's intact record
+    acked = set()
+    for tag in ("a", "b"):
+        acked |= {
+            int(x) for x in (tmp_path / f"ack-{tag}.txt").read_text().split()
+        }
+    assert acked == set(range(n))  # every key acked by exactly the winners
+    assert store.stats()["duplicates"] == 2 * n - len(loaded)
+
+
+def test_jsonl_writers_survive_injected_partial_writes(tmp_path):
+    """A torn partial line injected between two writers' rounds (as a
+    crash mid-write would leave) must corrupt nothing: the next append
+    repairs the missing newline, the torn fragment is dropped on load,
+    and no acknowledged record is lost or duplicated."""
+    store = ResultStore(tmp_path / "store.jsonl")
+    assert store.append("pre", "h", {"v": 0})
+    # Crash artifact: half a JSON record, no trailing newline.
+    with store.path.open("a") as f:
+        f.write('{"cell_id": "torn", "spec_hash": "h", "result": {"v"')
+    procs = [
+        _spawn_appender(tmp_path, store.path, tag, 10, delay=0.001)
+        for tag in ("a", "b")
+    ]
+    for p in procs:
+        assert p.wait(timeout=60) == 0, p.stderr.read().decode()
+    loaded = ResultStore(store.path).load()  # fresh instance: no caches
+    assert len(loaded) == 11  # "pre" + 10 raced keys; torn line dropped
+    assert ("torn", "h") not in loaded
+    assert loaded[("pre", "h")] == {"v": 0}
+    # Exactly-once at the raw-line level, not just the folded dict.
+    keys = [
+        (json.loads(ln)["cell_id"], json.loads(ln)["spec_hash"])
+        for ln in store.path.read_text().splitlines()
+        if _parses(ln)
+    ]
+    assert len(keys) == len(set(keys))
+
+
+def _parses(ln: str) -> bool:
+    try:
+        json.loads(ln)
+        return True
+    except json.JSONDecodeError:
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Crash consistency, per backend's crash model
+# ---------------------------------------------------------------------------
+def test_jsonl_store_truncation_at_every_byte(tmp_path):
+    """The PR 3 property, pinned at the store layer on canned records
+    (no simulator): truncate at EVERY byte offset; a fresh store must
+    load exactly the records whose full JSON survived, and the next
+    append must repair the tail without losing them."""
+    path = tmp_path / "s.jsonl"
+    seed = ResultStore(path)
+    for i in range(4):
+        seed.append(f"c{i}", f"h{i}", {"v": i, "pad": "x" * (7 * i)})
+    raw = path.read_bytes()
+    newline_at = [i for i, b in enumerate(raw) if b == ord("\n")]
+    for off in range(len(raw) + 1):
+        path.write_bytes(raw[:off])
+        fresh = ResultStore(path)
+        loaded = fresh.load()
+        # Record k survives once its JSON content (everything before its
+        # newline) is on disk — the newline itself may be torn.
+        expect = sum(1 for e in newline_at if e <= off)
+        assert len(loaded) == expect, f"offset {off}"
+        # Appending onto any truncation point repairs the tail: the
+        # surviving records and the new one all load.
+        assert fresh.append("new", "hn", {"v": -1})
+        assert len(fresh.load()) == expect + 1, f"offset {off}"
+
+
+def test_jsonl_lease_log_truncation_never_errors(tmp_path):
+    """The coordination sidecar obeys the same torn-line discipline:
+    after truncation at any byte, a fresh store's leases()/workers()/
+    stats() parse cleanly and reflect exactly the surviving full rows."""
+    store = ResultStore(tmp_path / "s.jsonl")
+    store.claim("c1", "h", "w1", ttl=30.0, now=100.0)
+    store.claim("c2", "h", "w2", ttl=30.0, now=100.0)
+    store.renew("c1", "h", "w1", ttl=30.0, now=110.0)
+    store.heartbeat("w3", info={"pid": 1}, now=120.0)
+    raw = store.lease_path.read_bytes()
+    newline_at = [i for i, b in enumerate(raw) if b == ord("\n")]
+    for off in range(len(raw) + 1):
+        store.lease_path.write_bytes(raw[:off])
+        fresh = ResultStore(store.path)
+        stats = fresh.stats()
+        leases = fresh.leases()
+        fresh.workers()
+        # The lease fold only consumes newline-terminated rows (unlike
+        # results, where a complete-JSON torn tail still loads): a row
+        # survives once its newline byte is on disk.
+        n_rows = sum(1 for e in newline_at if e < off)
+        assert stats["claims"] == min(2, n_rows)
+        if n_rows == 0:
+            assert leases == {}
+
+
+def test_sqlite_survives_sigkill_at_random_points(tmp_path):
+    """Sqlite's crash model: SIGKILL a live appender at seeded-random
+    moments.  After every kill the database must open and load cleanly,
+    every acknowledged append must be present (synchronous=FULL: the ack
+    implies a durable commit), nothing outside the intended set appears,
+    and a resumed appender completes the set."""
+    import random
+
+    rng = random.Random(0xD15C)
+    path = tmp_path / "s.sqlite"
+    n = 40
+    intended = {(f"cell-{i}", "hash") for i in range(n)}
+    for round_no in range(3):
+        proc = _spawn_appender(
+            tmp_path, path, f"r{round_no}", n, delay=0.002
+        )
+        time.sleep(rng.uniform(0.05, 0.6))
+        proc.kill()  # SIGKILL — no atexit, no journal cleanup
+        proc.wait(timeout=30)
+        acked = set()
+        for tag in [f"r{r}" for r in range(round_no + 1)]:
+            ack = tmp_path / f"ack-{tag}.txt"
+            if ack.exists():
+                acked |= {int(x) for x in ack.read_text().split()}
+        loaded = SqliteResultStore(path).load()  # journal rollback here
+        assert {(f"cell-{i}", "hash") for i in acked} <= set(loaded)
+        assert set(loaded) <= intended
+        for (cid, h), rec in loaded.items():
+            assert rec["payload"] == int(cid.split("-")[1])
+    # A clean resume completes the set exactly-once.
+    proc = _spawn_appender(tmp_path, path, "final", n)
+    assert proc.wait(timeout=60) == 0, proc.stderr.read().decode()
+    loaded = SqliteResultStore(path).load()
+    assert set(loaded) == intended
+
+
+# ---------------------------------------------------------------------------
+# Worker loop + coordinator view
+# ---------------------------------------------------------------------------
+def _tiny_sweep(n_cells: int = 2) -> SweepSpec:
+    base = ScenarioSpec(
+        name="tiny",
+        workload=WorkloadAxis(kind="fb", num_jobs=6),
+        cluster=ClusterAxis(num_machines=4),
+        scheduler=SchedulerAxis(policy="fifo"),
+    )
+    return SweepSpec(
+        name="tiny", base=base,
+        grids=(SweepSpec.grid(**{"workload.seed": tuple(range(n_cells))}),),
+    )
+
+
+def _strip_wall(result: dict) -> dict:
+    return {k: v for k, v in result.items() if k != "wall_s"}
+
+
+def test_run_worker_converges_and_matches_inline(store):
+    """A single worker loop converges the sweep and stores payloads
+    bit-identical (minus wall clock) to the inline supervisor's."""
+    sweep = _tiny_sweep(2)
+    inline = run_sweep(sweep, workers=0)
+    summary = run_worker(
+        sweep, store, worker_id="w1", ttl=5.0, timeout=60.0, deadline=120.0,
+    )
+    assert sorted(summary["computed"]) == sorted(cid for cid, _ in sweep.expand())
+    assert not summary["stalled"]
+    assert summary["duplicates_dropped"] == 0
+    stored = store.load()
+    for cid, spec in sweep.expand():
+        assert _strip_wall(stored[(cid, spec.spec_hash())]) == _strip_wall(
+            inline[cid]
+        )
+    status = sweep_status(sweep, store)
+    assert status["converged"]
+    assert status["pending"] == [] and status["leased"] == {}
+    # The worker's own bookkeeping went through the lease protocol.
+    assert summary["stats"]["claims"] == 2
+    assert summary["stats"]["releases"] == 2
+
+
+def test_sweep_status_classifies_cells_and_workers(store):
+    sweep = _tiny_sweep(3)
+    cells = sweep.expand()
+    cids = [cid for cid, _ in cells]
+    hashes = {cid: spec.spec_hash() for cid, spec in cells}
+    now = time.time()
+    # One done, one live-leased, one with an expired (reclaimable) lease.
+    store.append(cids[0], hashes[cids[0]], {"mean_sojourn_s": 1.0})
+    store.claim(cids[1], hashes[cids[1]], "w-live", ttl=300.0, now=now)
+    store.claim(cids[2], hashes[cids[2]], "w-dead", ttl=1.0, now=now - 100.0)
+    store.heartbeat("w-live", info={"pid": 1}, now=now)
+    store.heartbeat("w-dead", now=now - 500.0)
+    status = sweep_status(sweep, store, now=now, dead_after=60.0)
+    assert status["done"] == [cids[0]]
+    assert list(status["leased"]) == [cids[1]]
+    assert status["leased"][cids[1]]["worker"] == "w-live"
+    assert status["expired_leases"] == [cids[2]]
+    assert status["pending"] == [cids[2]]  # expired lease = claimable
+    assert not status["converged"]
+    assert status["workers"]["w-live"]["live"]
+    assert not status["workers"]["w-dead"]["live"]
+    # A stored result under an outdated hash is stale, not done.
+    store.append(cids[1], "stale-hash", {"mean_sojourn_s": 2.0})
+    status = sweep_status(sweep, store, now=now)
+    assert status["stale"] == [cids[1]]
+    assert cids[1] not in status["done"]
+
+
+def test_matrix_report_lists_missing_cells():
+    """Graceful degradation: a partial matrix says exactly what is
+    absent instead of silently shrinking."""
+    results = {
+        "a": {"mean_sojourn_s": 1.0, "p99_sojourn_s": 2.0},
+        "q": {"quarantined": True, "cell_id": "q", "error": "x",
+              "attempts": 3},
+    }
+    matrix = matrix_report(results, expected=["a", "b", "q"])
+    assert matrix["missing"] == ["b"]
+    assert matrix["quarantined"] == ["q"]
+    assert matrix["cells"] == 1
+    # Complete matrices report the empty list, not a missing key.
+    assert matrix_report(results)["missing"] == []
+
+
+# ---------------------------------------------------------------------------
+# Chaos: SIGKILL a worker mid-cell, the sweep still converges exactly-once
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="session")
+def inline_paper_fb_quick():
+    """Single-process reference payloads for the chaos test (shared
+    across backend params; wall_s is the only volatile field)."""
+    return run_sweep(quick_sweep(get_preset("paper-fb")), workers=0)
+
+
+def _spawn_cli_worker(store_path, worker_id, hook_path, *, ttl=1.5):
+    return subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.scenarios", "worker", "paper-fb",
+            "--quick", "--store", str(store_path), "--worker-id", worker_id,
+            "--ttl", str(ttl), "--renew-every", str(ttl / 5), "--poll",
+            "0.2", "--timeout", "120", "--deadline", "240",
+        ],
+        env=_worker_env(hook_path), cwd=str(REPO_ROOT),
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+    )
+
+
+@pytest.mark.parametrize("backend", ["sqlite", "jsonl"])
+def test_chaos_sigkill_worker_sweep_converges_exactly_once(
+    backend, tmp_path, inline_paper_fb_quick
+):
+    """The tentpole acceptance property.  Two CLI workers share a store
+    on the paper-fb@quick matrix; every cell's first attempt is slowed
+    (widening the kill window) and the worker holding a lease is
+    SIGKILLed at a seeded-random point inside it.  The survivor must
+    reclaim the orphaned lease (reissues > 0), converge the matrix with
+    zero quarantines, and store payloads bit-identical (minus wall
+    clock) to the single-process run — with every (cell_id, spec_hash)
+    appearing exactly once."""
+    import random
+
+    rng = random.Random(0xC4A05)
+    ttl = 1.5
+    store_path = tmp_path / (
+        "store.sqlite" if backend == "sqlite" else "store.jsonl"
+    )
+    hook_path = tmp_path / "hook.json"
+    hook_path.write_text(json.dumps({
+        "slow_once": {"cells": "*", "seconds": 3.0},
+        "state_dir": str(tmp_path),
+    }))
+    sweep = quick_sweep(get_preset("paper-fb"))
+    hashes = {cid: spec.spec_hash() for cid, spec in sweep.expand()}
+    store = open_store(store_path)
+
+    victim = _spawn_cli_worker(store_path, "chaos-victim", hook_path, ttl=ttl)
+    survivor = None
+    try:
+        # Wait until the victim holds a lease on a cell that is not yet
+        # stored — it is inside the slowed first attempt.
+        deadline = time.monotonic() + 60.0
+        claimed = None
+        while time.monotonic() < deadline and claimed is None:
+            done = set(store.load())
+            for key, lease in store.leases().items():
+                if lease.worker == "chaos-victim" and key not in done:
+                    claimed = key
+                    break
+            time.sleep(0.05)
+        assert claimed is not None, "victim never claimed a cell"
+        # Randomized kill point inside the slow window.
+        time.sleep(rng.uniform(0.0, 1.0))
+        os.kill(victim.pid, signal.SIGKILL)
+        victim.wait(timeout=30)
+
+        survivor = _spawn_cli_worker(
+            store_path, "chaos-survivor", hook_path, ttl=ttl
+        )
+        assert survivor.wait(timeout=240) == 0
+    finally:
+        for p in (victim, survivor):
+            if p is not None and p.poll() is None:
+                p.kill()
+                p.wait(timeout=30)
+
+    status = sweep_status(sweep, store_path)
+    assert status["converged"], status
+    assert status["quarantined"] == []
+    assert status["stats"]["reissues"] >= 1  # the orphaned lease was reclaimed
+    stored = store.load()
+    assert set(stored) == {(cid, h) for cid, h in hashes.items()}
+    for cid, h in hashes.items():
+        assert _strip_wall(stored[(cid, h)]) == _strip_wall(
+            inline_paper_fb_quick[cid]
+        ), cid
+    if backend == "jsonl":
+        # Exactly-once at the raw line level: no dropped-duplicate path
+        # may have physically double-appended.
+        keys = [
+            (json.loads(ln)["cell_id"], json.loads(ln)["spec_hash"])
+            for ln in store_path.read_text().splitlines()
+        ]
+        assert len(keys) == len(set(keys))

@@ -411,3 +411,54 @@ def test_map_only_axis_strips_reduce_tasks():
     jobs, _ = build_workload(spec)
     assert all(not j.reduce_tasks for j in jobs)
     assert any(j.map_tasks for j in jobs)
+
+
+# ---------------------------------------------------------------------------
+# PSBS calibration knobs (scheduler.psbs_late_factor / psbs_max_spread)
+# ---------------------------------------------------------------------------
+def test_spec_hash_stable_after_psbs_knob_fields():
+    """Adding SchedulerAxis fields must not move existing hashes (the
+    FaultAxis precedent): knobs at their defaults are omitted from
+    to_dict, so every store written before the fields existed still
+    resumes.  This anchor is the paper-fb base cell's hash at the time
+    the knobs were added — if it moves, stored sweeps invalidate."""
+    assert paper_fb_base().spec_hash() == "0286c8364f3373fb"
+    sched = paper_fb_base().to_dict()["scheduler"]
+    assert "psbs_late_factor" not in sched
+    assert "psbs_max_spread" not in sched
+
+
+def test_psbs_knobs_roundtrip_and_change_hash():
+    base = paper_fb_base()
+    tuned = base.override(**{
+        "scheduler.policy": "psbs",
+        "scheduler.psbs_late_factor": 2.0,
+        "scheduler.psbs_max_spread": 3,
+    })
+    d = tuned.to_dict()
+    assert d["scheduler"]["psbs_late_factor"] == 2.0
+    assert d["scheduler"]["psbs_max_spread"] == 3
+    assert ScenarioSpec.from_dict(d) == tuned
+    assert tuned.spec_hash() != base.override(
+        **{"scheduler.policy": "psbs"}
+    ).spec_hash()
+
+
+def test_psbs_calibration_cell_reports_swept_knobs():
+    """The calibration preset's whatif block is self-describing: each
+    cell reports the late_factor / max_spread it actually ran with, and
+    the knobs reach the built scheduler (not just the report)."""
+    sweep = quick_sweep(get_preset("paper-psbs-calibration"))
+    cells = dict(sweep.expand())
+    cid = (
+        "scheduler.error_alpha=1.5,scheduler.psbs_late_factor=2.0,"
+        "scheduler.psbs_max_spread=3"
+    )
+    assert cid in cells
+    rep = run_scenario(cells[cid])
+    assert rep["whatif"]["late_factor"] == 2.0
+    assert rep["whatif"]["max_spread"] == 3
+    # Reference grid: las cells are error-alpha swept but knob-free.
+    assert any(s.scheduler.policy == "las" for s in cells.values())
+    alphas = {s.scheduler.error_alpha for s in cells.values()}
+    assert alphas == {1.5, 2.0}  # heavier than the Fig. 6 sweep's max 1.0
